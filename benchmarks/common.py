@@ -1,0 +1,96 @@
+"""Shared benchmark harness for the paper-reproduction suite.
+
+One entry per paper table/figure lives in ``benchmarks/fig*.py`` /
+``table*.py``; each emits CSV rows ``name,seconds,derived`` (the derived
+column carries the figure's headline metric) and a JSON artifact under
+``artifacts/bench/``.
+
+The machine is the scaled paper box (``core.config.benchmark_machine``):
+radix-6 tables, DRAM:footprint and NVMM-latency ratios of Table 1.  Traces
+within a figure are padded to one shape so every policy shares a single
+compiled simulator.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import (CostConfig, MachineConfig, PolicyConfig,
+                        TieredMemSimulator, Trace, benchmark_machine,
+                        bhi, bhi_mig, bind_all, linux_default, pad_trace,
+                        workloads)
+
+ART = Path(__file__).resolve().parent.parent / "artifacts" / "bench"
+
+# scaled run dimensions (see DESIGN.md section 2: ratios, not magnitudes)
+FOOTPRINT = 1 << 18
+RUN_STEPS = 8192
+QUICK_RUN_STEPS = 2048
+
+WORKLOADS = ("memcached", "redis", "btree", "hashjoin", "xsbench", "bfs")
+# secondary figures use a 4-workload subset to bound suite runtime; fig9
+# (the headline) runs all six
+WORKLOADS_SMALL = ("memcached", "redis", "btree", "xsbench")
+
+
+def make_traces(mc: MachineConfig, run_steps: int = RUN_STEPS,
+                names=WORKLOADS) -> Dict[str, Trace]:
+    traces = {}
+    for name in names:
+        gen = workloads.ALL_WORKLOADS[name]
+        traces[name] = gen(mc, FOOTPRINT, run_steps)
+    steps = max(t.n_steps for t in traces.values())
+    return {k: pad_trace(t, steps) for k, t in traces.items()}
+
+
+def run(mc: MachineConfig, pc: PolicyConfig, trace: Trace):
+    t0 = time.time()
+    res = TieredMemSimulator(mc=mc, pc=pc).run(trace)
+    return res, time.time() - t0
+
+
+def phase_metrics(res, trace: Trace) -> Dict[str, float]:
+    """Split cumulative timelines at the populate/run boundary."""
+    tl = res.timeline
+    p = min(trace.populate_steps, len(tl["total_cycles"]) - 1)
+
+    def seg(key, a, b):
+        return float(tl[key][b] - (tl[key][a] if a > 0 else 0.0))
+
+    last = len(tl["total_cycles"]) - 1
+    out = {}
+    for key in ("total_cycles", "walk_cycles", "stall_cycles",
+                "data_mem_cycles", "fault_cycles"):
+        out[f"run_{key}"] = seg(key, p, last)
+        out[f"startup_{key}"] = seg(key, 0, p)
+    out["run_walks"] = seg("walks", p, last)
+    out["startup_walks"] = seg("walks", 0, p)
+    out.update(res.summary())
+    return out
+
+
+def improvement(base: float, val: float) -> float:
+    """Paper convention: % improvement of val over base (higher = better)."""
+    return 100.0 * (base - val) / max(base, 1e-12)
+
+
+def geomean_improvement(pcts: List[float]) -> float:
+    """Geometric mean of speedup ratios, reported back as % improvement."""
+    ratios = [max(1e-6, 1.0 - p / 100.0) for p in pcts]
+    g = float(np.exp(np.mean(np.log(ratios))))
+    return 100.0 * (1.0 - g)
+
+
+def emit(rows: List[tuple]):
+    for name, secs, derived in rows:
+        print(f"{name},{secs:.2f},{derived}", flush=True)
+
+
+def save_artifact(name: str, payload):
+    ART.mkdir(parents=True, exist_ok=True)
+    (ART / f"{name}.json").write_text(json.dumps(payload, indent=1,
+                                                 default=float))

@@ -1,0 +1,59 @@
+"""Paper Fig. 10 + Table 5: the multi-tenant (cloud) scenario.
+
+Fill apps occupy DRAM; the benchmark app lands on NVMM; the fill apps then
+exit and AutoNUMA promotes the benchmark's hot data — but only Radiant
+(Mig) brings the leaf PT pages back to DRAM.  Also emits the Table-5
+migration/skip accounting.
+"""
+from __future__ import annotations
+
+from . import common
+from repro.core import benchmark_machine, bhi_mig, linux_default, pad_trace, workloads
+
+
+def main(quick: bool = False):
+    mc = benchmark_machine()
+    steps = common.QUICK_RUN_STEPS if quick else common.RUN_STEPS
+    names = common.WORKLOADS[:2] if quick else common.WORKLOADS_SMALL
+    traces = {n: workloads.multi_tenant(mc, n, 1 << 17, steps)
+              for n in names}
+    pad = max(t.n_steps for t in traces.values())
+    traces = {k: pad_trace(t, pad) for k, t in traces.items()}
+
+    results = {}
+    rows = []
+    for wname, trace in traces.items():
+        base = None
+        for pname, pc in [("autonuma", linux_default()),
+                          ("BHi+Mig", bhi_mig())]:
+            res, secs = common.run(mc, pc, trace)
+            m = common.phase_metrics(res, trace)
+            if base is None:
+                base = m
+            imp = {k: common.improvement(base[f"run_{k}_cycles"],
+                                         m[f"run_{k}_cycles"])
+                   for k in ("total", "walk", "stall")}
+            results.setdefault(wname, {})[pname] = {**m, "improv": imp}
+            rows.append((f"fig10/{wname}/{pname}", secs,
+                         f"total%={imp['total']:.1f};walk%={imp['walk']:.1f};"
+                         f"stall%={imp['stall']:.1f}"))
+            if pname == "BHi+Mig":
+                rows.append((
+                    f"table5/{wname}", 0.0,
+                    f"data_migs={m['data_migrations']};"
+                    f"pte_success={m['l4_mig_success']};"
+                    f"already_dest={m['l4_mig_already_dest']};"
+                    f"in_dram={m['l4_mig_in_dram']};"
+                    f"sibling={m['l4_mig_sibling_guard']};"
+                    f"lock_skip={m['l4_mig_lock_skip']}"))
+    common.emit(rows)
+    for k in ("total", "walk", "stall"):
+        g = common.geomean_improvement(
+            [results[w]["BHi+Mig"]["improv"][k] for w in results])
+        print(f"fig10/geomean/BHi+Mig/{k},0.00,{g:.2f}%", flush=True)
+    common.save_artifact("fig10_multitenant", results)
+    return results
+
+
+if __name__ == "__main__":
+    main()

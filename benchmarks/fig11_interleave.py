@@ -1,0 +1,54 @@
+"""Paper Fig. 11/12 + Table 4 row 3: interleaved allocation, AutoNUMA off.
+
+Interleave spreads data AND page-table pages round-robin over all four
+nodes (paper section 3.2/Fig. 5); BHi pulls only the upper PT levels back
+to DRAM.  Also reports the Fig. 12 page-walk-latency improvement.
+"""
+from __future__ import annotations
+
+from . import common
+from repro.core import (INTERLEAVE, PT_BIND_HIGH, PT_FOLLOW_DATA,
+                        PolicyConfig, benchmark_machine)
+
+
+def main(quick: bool = False):
+    mc = benchmark_machine()
+    steps = common.QUICK_RUN_STEPS if quick else common.RUN_STEPS
+    names = common.WORKLOADS[:2] if quick else common.WORKLOADS_SMALL
+    traces = common.make_traces(mc, steps, names)
+    policies = [
+        ("interleave", PolicyConfig(data_policy=INTERLEAVE,
+                                    pt_policy=PT_FOLLOW_DATA, autonuma=False)),
+        ("interleave+BHi", PolicyConfig(data_policy=INTERLEAVE,
+                                        pt_policy=PT_BIND_HIGH,
+                                        autonuma=False)),
+    ]
+    results, rows = {}, []
+    for wname, trace in traces.items():
+        base = None
+        for pname, pc in policies:
+            res, secs = common.run(mc, pc, trace)
+            m = common.phase_metrics(res, trace)
+            if base is None:
+                base = m
+            imp = {k: common.improvement(base[f"run_{k}_cycles"],
+                                         m[f"run_{k}_cycles"])
+                   for k in ("total", "walk", "stall")}
+            # Fig. 12: average page-walk latency in the run phase
+            walk_lat = m["run_walk_cycles"] / max(m["run_walks"], 1)
+            results.setdefault(wname, {})[pname] = {**m, "improv": imp,
+                                                    "walk_lat": walk_lat}
+            rows.append((f"fig11/{wname}/{pname}", secs,
+                         f"total%={imp['total']:.1f};walk%={imp['walk']:.1f};"
+                         f"walk_lat={walk_lat:.0f}cy"))
+    common.emit(rows)
+    for k in ("total", "walk", "stall"):
+        g = common.geomean_improvement(
+            [results[w]["interleave+BHi"]["improv"][k] for w in results])
+        print(f"fig11/geomean/BHi/{k},0.00,{g:.2f}%", flush=True)
+    common.save_artifact("fig11_interleave", results)
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Paper Fig. 13 + Table 4 row 4: transparent huge pages.
+
+THP maps at the mid level (3-level walks, no PTE pages): BHi effectively
+binds the whole table; Mig has nothing to migrate and BHi+Mig == BHi.
+AutoNUMA disabled per the paper's setting.
+"""
+from __future__ import annotations
+
+from . import common
+from repro.core import benchmark_machine, bhi, bhi_mig, linux_default
+
+
+def main(quick: bool = False):
+    mc = benchmark_machine(thp=True)
+    steps = common.QUICK_RUN_STEPS if quick else common.RUN_STEPS
+    names = common.WORKLOADS[:2] if quick else common.WORKLOADS_SMALL
+    traces = common.make_traces(mc, steps, names)
+    policies = [("thp-base", linux_default(autonuma=False)),
+                ("thp-BHi", bhi(autonuma=False)),
+                ("thp-BHi+Mig", bhi_mig(autonuma=False))]
+    results, rows = {}, []
+    for wname, trace in traces.items():
+        base = None
+        for pname, pc in policies:
+            res, secs = common.run(mc, pc, trace)
+            m = common.phase_metrics(res, trace)
+            if base is None:
+                base = m
+            imp = {k: common.improvement(base[f"run_{k}_cycles"],
+                                         m[f"run_{k}_cycles"])
+                   for k in ("total", "walk", "stall")}
+            results.setdefault(wname, {})[pname] = {**m, "improv": imp}
+            rows.append((f"fig13/{wname}/{pname}", secs,
+                         f"total%={imp['total']:.1f};walk%={imp['walk']:.1f}"))
+    common.emit(rows)
+    for k in ("total", "walk"):
+        g = common.geomean_improvement(
+            [results[w]["thp-BHi"]["improv"][k] for w in results])
+        print(f"fig13/geomean/BHi/{k},0.00,{g:.2f}%", flush=True)
+    common.save_artifact("fig13_thp", results)
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Paper Fig. 1 + section 6.5: application startup (populate) time.
+
+Populating a Redis-like store: once DRAM fills, the default kernel
+allocates PT pages on NVMM; Radiant keeps the upper levels in DRAM.
+AutoNUMA disabled per the paper.  Emits the cumulative-cycles timeline
+(the Fig. 1 curve) and the startup improvement.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from . import common
+from repro.core import benchmark_machine, bhi, bhi_mig, linux_default, workloads
+
+
+def main(quick: bool = False):
+    mc = benchmark_machine()
+    tr = workloads.kv_store(mc, common.FOOTPRINT,
+                            run_steps=64, seed=10, name="redis")
+    results, rows = {}, []
+    base = None
+    for pname, pc in [("first-touch", linux_default(autonuma=False)),
+                      ("BHi", bhi(autonuma=False)),
+                      ("BHi+Mig", bhi_mig(autonuma=False))]:
+        res, secs = common.run(mc, pc, tr)
+        m = common.phase_metrics(res, tr)
+        if base is None:
+            base = m
+        imp = common.improvement(base["startup_total_cycles"],
+                                 m["startup_total_cycles"])
+        walk_imp = common.improvement(base["startup_walk_cycles"],
+                                      m["startup_walk_cycles"])
+        tl = res.timeline["total_cycles"][:tr.populate_steps]
+        results[pname] = {
+            "startup_total": m["startup_total_cycles"],
+            "startup_walk": m["startup_walk_cycles"],
+            "improv": imp, "walk_improv": walk_imp,
+            "curve": np.asarray(tl[::max(len(tl) // 128, 1)]).tolist(),
+        }
+        rows.append((f"fig1/redis-populate/{pname}", secs,
+                     f"startup%={imp:.1f};walk%={walk_imp:.1f}"))
+    common.emit(rows)
+    common.save_artifact("fig1_startup", results)
+    return results
+
+
+if __name__ == "__main__":
+    main()

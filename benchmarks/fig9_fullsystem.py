@@ -1,0 +1,51 @@
+"""Paper Fig. 9 + Table 4 rows 1-2: full-system run, first-touch policy.
+
+Baseline: Linux first-touch + AutoNUMA (data pages only).  Radiant: BHi
+(bind upper PT levels to DRAM) and BHi+Mig (leaf PT migration triggered by
+data migrations).  Reports run-phase improvements per workload.
+"""
+from __future__ import annotations
+
+from . import common
+from repro.core import benchmark_machine, bhi, bhi_mig, linux_default
+
+
+def main(quick: bool = False):
+    mc = benchmark_machine()
+    steps = common.QUICK_RUN_STEPS if quick else common.RUN_STEPS
+    names = common.WORKLOADS[:2] if quick else common.WORKLOADS
+    traces = common.make_traces(mc, steps, names)
+
+    policies = [("first-touch", linux_default()), ("BHi", bhi()),
+                ("BHi+Mig", bhi_mig())]
+    results = {}
+    rows = []
+    for wname, trace in traces.items():
+        base = None
+        for pname, pc in policies:
+            res, secs = common.run(mc, pc, trace)
+            m = common.phase_metrics(res, trace)
+            if base is None:
+                base = m
+            imp = {k: common.improvement(base[f"run_{k}_cycles"],
+                                         m[f"run_{k}_cycles"])
+                   for k in ("total", "walk", "stall")}
+            results.setdefault(wname, {})[pname] = {**m, "improv": imp}
+            rows.append((f"fig9/{wname}/{pname}", secs,
+                         f"total%={imp['total']:.1f};walk%={imp['walk']:.1f};"
+                         f"stall%={imp['stall']:.1f};"
+                         f"walk_share={m['run_walk_cycles']/max(m['run_total_cycles'],1):.3f}"))
+    common.emit(rows)
+
+    for pname in ("BHi", "BHi+Mig"):
+        for k in ("total", "walk", "stall"):
+            g = common.geomean_improvement(
+                [results[w][pname]["improv"][k] for w in results])
+            rows.append((f"fig9/geomean/{pname}/{k}", 0.0, f"{g:.2f}%"))
+            print(f"fig9/geomean/{pname}/{k},0.00,{g:.2f}%", flush=True)
+    common.save_artifact("fig9_fullsystem", results)
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,247 @@
+"""Roofline analysis over the dry-run artifacts (deliverable g).
+
+Per (arch x shape x mesh) cell, three terms in seconds:
+
+    compute    = FLOPs / (chips x 197e12 bf16 FLOP/s)
+    memory     = HBM bytes / (chips x 819e9 B/s)
+    collective = collective bytes-on-wire / (chips x 50e9 B/s per ICI link)
+
+Two variants of each:
+  * ``hlo_*``      — straight from ``compiled.cost_analysis()`` and the
+    parsed SPMD HLO, as the assignment prescribes.  CAVEAT (measured, see
+    EXPERIMENTS.md §Roofline): XLA cost analysis counts while-loop bodies
+    ONCE, so any scanned structure (layer stacks, microbatches, attention
+    chunks) is undercounted by its trip count.  These numbers are reported
+    verbatim but NOT used for bottleneck identification.
+  * ``ana_*``      — first-principles estimates with the implementation's
+    actual behaviors priced in (full-remat recompute, block-causal 2x
+    attention waste, FSDP gathers per microbatch, TP/DP collective
+    traffic).  Used to identify the dominant term and drive §Perf.
+
+MODEL_FLOPS = 6·N_active·tokens (train) / 2·N_active·tokens (inference);
+the ratio MODEL_FLOPS / ana_flops exposes remat & masked-block waste.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+PEAK_FLOPS = 197e12        # bf16 per chip (v5e-class)
+HBM_BW = 819e9             # B/s per chip
+ICI_BW = 50e9              # B/s per link
+
+ART = Path(__file__).resolve().parent.parent / "artifacts"
+DRY = ART / "dryrun"
+
+
+def _arch_cfg(arch_id):
+    from repro import configs
+    return configs.get_config(arch_id)
+
+
+def _shape(shape_id):
+    from repro.configs.base import SHAPES
+    return SHAPES[shape_id]
+
+
+def analytic_terms(rec: dict) -> dict:
+    """First-principles FLOPs / HBM bytes / collective bytes per chip."""
+    cfg = _arch_cfg(rec["arch"])
+    shape = _shape(rec["shape"])
+    chips = rec.get("n_chips", 256)
+    tp = 16
+    dp = chips // tp
+    P = cfg.n_params()
+    Pa = cfg.n_active_params()
+    pbytes = 2.0 * P                      # bf16
+    kind = shape.kind
+    B, S = shape.global_batch, shape.seq_len
+    tokens = B * S
+    d, L = cfg.d_model, cfg.n_layers
+    H, KH, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    fsdp = rec.get("rules_fsdp", False)
+    strategy = rec.get("strategy", {}) or {}
+    mb = strategy.get("microbatches", 1)
+    variant = rec.get("variant") or ""
+    moe_ep = variant.startswith("moe_ep")
+    kv_f8 = "kv_dtype" in strategy or variant == "kv_f8"
+    # under experts-over-data, expert weights are never gathered and their
+    # grads need no DP reduction; tokens travel via all-to-all instead
+    pbytes_gather = pbytes - (2.0 * cfg.n_expert_params() if moe_ep else 0)
+
+    n_attn = sum(1 for i in range(L)
+                 if cfg.attn_every <= 1 or i % cfg.attn_every
+                 == cfg.attn_every - 1) if not cfg.rwkv else 0
+
+    if kind == "train":
+        # fwd 2ND + bwd 4ND + full-remat recompute fwd 2ND
+        flops = 8.0 * Pa * tokens
+        # attention: scores+pv 4*S^2*H*Dh per seq-layer; block-causal
+        # computes masked blocks too (x2 over causal-optimal); fwd+bwd+
+        # recompute => x4 over single fwd
+        attn = 4.0 * B * S * S * H * Dh * n_attn * 2.0 / 2.0 * 4.0
+        flops += attn
+        act_bytes = 12.0 * tokens * d * L * 2.0          # rw per layer, bf16
+        hbm = 3.0 * pbytes + 16.0 * P + act_bytes        # params + opt + acts
+        # collectives: DP grad reduce + TP act all-reduces (+FSDP gathers)
+        coll = 2.0 * (pbytes_gather / tp) * (dp - 1) / dp  # grad all-reduce
+        coll += 4.0 * 2.0 * (tokens * d * 2.0 / dp) * (tp - 1) / tp
+        if fsdp:
+            coll += 3.0 * (pbytes_gather / tp) * (dp - 1) / dp * mb
+        if moe_ep:
+            topk = cfg.moe.top_k if cfg.moe else 1
+            # dispatch + combine all-to-all, fwd + bwd
+            coll += 4.0 * (tokens * d * 2.0 / dp) * topk * (dp - 1) / dp
+        coll_per_chip = coll / 1.0                        # already per chip-ish
+        hbm_per_chip = hbm / chips
+        flops_per_chip = flops / chips
+        model = 6.0 * Pa * tokens
+    elif kind == "prefill":
+        flops = 2.0 * Pa * tokens
+        attn = 4.0 * B * S * S * H * Dh * n_attn / 2.0 * 2.0  # block-causal
+        flops += attn
+        kv_bytes = 2.0 * n_attn * tokens * KH * Dh * 2.0
+        hbm = pbytes + 6.0 * tokens * d * L * 2.0 + kv_bytes
+        coll = 2.0 * (tokens * d * 2.0 / dp) * (tp - 1) / tp * L
+        if fsdp:
+            coll += (pbytes / tp) * (dp - 1) / dp
+        flops_per_chip = flops / chips
+        hbm_per_chip = hbm / chips
+        coll_per_chip = coll
+        model = 2.0 * Pa * tokens
+    else:  # decode: one token per sequence
+        flops = 2.0 * Pa * B + 4.0 * B * S * H * Dh * n_attn
+        kv_elt = 1.0 if kv_f8 else 2.0
+        kv_read = 2.0 * n_attn * B * S * KH * Dh * kv_elt
+        hbm = pbytes + kv_read
+        coll = 2.0 * (B * d * 2.0 / max(dp, 1)) * (tp - 1) / tp * L
+        if fsdp:
+            coll += (pbytes / tp) * (dp - 1) / dp
+        flops_per_chip = flops / chips
+        hbm_per_chip = hbm / chips
+        coll_per_chip = coll
+        model = 2.0 * Pa * B
+
+    return dict(
+        ana_flops_chip=flops_per_chip,
+        ana_hbm_chip=hbm_per_chip,
+        ana_coll_chip=coll_per_chip,
+        model_flops=model,
+        t_compute=flops_per_chip / PEAK_FLOPS,
+        t_memory=hbm_per_chip / HBM_BW,
+        t_collective=coll_per_chip / ICI_BW,
+    )
+
+
+LEVERS = {
+    "compute": "compute-bound: raise MFU via causal-block skip / larger "
+               "per-chip batch; already near the good regime",
+    "memory": "HBM-bound: cut bytes via fused kernels (paged attention), "
+              "quantized KV/params, or more TP to shrink per-chip state",
+    "collective": "collective-bound: reshard to cut cross-chip traffic "
+                  "(less FSDP regather, int8 grad compression, overlap)",
+}
+
+
+def load_cells(mesh: str = "single"):
+    cells = []
+    d = DRY / mesh
+    if not d.exists():
+        return cells
+    for f in sorted(d.glob("*.json")):
+        rec = json.loads(f.read_text())
+        cells.append(rec)
+    return cells
+
+
+def list_variant_dirs():
+    if not DRY.exists():
+        return []
+    return sorted(p.name for p in DRY.iterdir()
+                  if p.is_dir() and "-" in p.name)
+
+
+def build_table(mesh: str = "single"):
+    rows = []
+    for rec in load_cells(mesh):
+        if rec.get("status") == "skipped":
+            rows.append(dict(arch=rec["arch"], shape=rec["shape"],
+                             status="skipped", reason=rec["reason"]))
+            continue
+        if rec.get("status") != "ok":
+            rows.append(dict(arch=rec["arch"], shape=rec["shape"],
+                             status="failed", reason=rec.get("error", "")))
+            continue
+        ana = analytic_terms(rec)
+        coll_hlo = sum(v["traffic"] for v in
+                       rec.get("collectives", {}).values())
+        hlo_flops = rec["cost"]["flops"]
+        hlo_bytes = rec["cost"]["bytes_accessed"]
+        terms = {"compute": ana["t_compute"], "memory": ana["t_memory"],
+                 "collective": ana["t_collective"]}
+        dom = max(terms, key=terms.get)
+        bound = max(terms.values())
+        useful = ana["model_flops"] / max(ana["ana_flops_chip"]
+                                          * rec["n_chips"], 1.0)
+        # roofline fraction: ideal model-compute time / achievable step time
+        t_model = ana["model_flops"] / (rec["n_chips"] * PEAK_FLOPS)
+        frac = t_model / max(sum(terms.values()), 1e-12)
+        rows.append(dict(
+            arch=rec["arch"], shape=rec["shape"], status="ok",
+            peak_gib=rec["memory"]["peak_est_bytes"] / (1 << 30),
+            t_compute=terms["compute"], t_memory=terms["memory"],
+            t_collective=terms["collective"], dominant=dom,
+            roofline_frac=frac, useful_ratio=useful,
+            hlo_flops_chip=hlo_flops, hlo_bytes_chip=hlo_bytes,
+            hlo_coll_chip=coll_hlo,
+            t_hlo_compute=hlo_flops / PEAK_FLOPS,
+            t_hlo_memory=hlo_bytes / HBM_BW,
+            t_hlo_collective=coll_hlo / ICI_BW,
+            lever=LEVERS[dom],
+        ))
+    return rows
+
+
+def to_markdown(rows, mesh: str) -> str:
+    out = [f"### Roofline — {mesh} mesh",
+           "",
+           "| arch | shape | peak GiB | t_comp (ms) | t_mem (ms) | "
+           "t_coll (ms) | dominant | roofline frac | MODEL/impl FLOPs | "
+           "HLO t_comp/t_mem/t_coll (ms, raw) |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                       f"{r['status']}: {r['reason'][:60]} | — | — | — |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['peak_gib']:.1f} | "
+            f"{1e3 * r['t_compute']:.2f} | {1e3 * r['t_memory']:.2f} | "
+            f"{1e3 * r['t_collective']:.2f} | **{r['dominant']}** | "
+            f"{r['roofline_frac']:.2f} | {r['useful_ratio']:.2f} | "
+            f"{1e3 * r['t_hlo_compute']:.2f}/{1e3 * r['t_hlo_memory']:.2f}/"
+            f"{1e3 * r['t_hlo_collective']:.2f} |")
+    return "\n".join(out)
+
+
+def main(quick: bool = False):
+    all_rows = {}
+    for mesh in ("single", "multipod", *list_variant_dirs()):
+        rows = build_table(mesh)
+        if not rows:
+            continue
+        all_rows[mesh] = rows
+        md = to_markdown(rows, mesh)
+        (ART / f"roofline_{mesh}.md").write_text(md)
+        for r in rows:
+            if r["status"] == "ok":
+                print(f"roofline/{mesh}/{r['arch']}/{r['shape']},0.00,"
+                      f"dom={r['dominant']};frac={r['roofline_frac']:.2f};"
+                      f"peakGiB={r['peak_gib']:.1f}", flush=True)
+    (ART / "roofline.json").write_text(
+        json.dumps(all_rows, indent=1, default=str))
+    return all_rows
+
+
+if __name__ == "__main__":
+    main()

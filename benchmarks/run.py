@@ -1,0 +1,58 @@
+"""Benchmark entry point: one module per paper table/figure + the Pillar-B
+serving benchmark + the roofline table.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig9,fig10]
+
+Prints ``name,seconds,derived`` CSV rows (as the harness skeleton asks) and
+writes JSON artifacts under artifacts/bench/.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="2 workloads, short traces (CI-scale)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module subset, e.g. fig9,table4")
+    args = ap.parse_args()
+
+    from . import (fig1_startup, fig5_ptdist, fig6_walklat, fig7_bind,
+                   fig9_fullsystem, fig10_multitenant, fig11_interleave,
+                   fig13_thp, kv_tiering, roofline, table4_summary)
+
+    modules = [
+        ("fig1", fig1_startup), ("fig5", fig5_ptdist),
+        ("fig6", fig6_walklat), ("fig7", fig7_bind),
+        ("fig9", fig9_fullsystem), ("fig10", fig10_multitenant),
+        ("fig11", fig11_interleave), ("fig13", fig13_thp),
+        ("table4", table4_summary), ("kv_tiering", kv_tiering),
+        ("roofline", roofline),
+    ]
+    if args.only:
+        keep = set(args.only.split(","))
+        modules = [(n, m) for n, m in modules if n in keep]
+
+    print("name,seconds,derived", flush=True)
+    failures = []
+    for name, mod in modules:
+        t0 = time.time()
+        try:
+            mod.main(quick=args.quick)
+            print(f"{name}/done,{time.time() - t0:.1f},ok", flush=True)
+        except Exception as e:  # noqa: BLE001 — report, keep going
+            failures.append(name)
+            traceback.print_exc()
+            print(f"{name}/done,{time.time() - t0:.1f},"
+                  f"FAILED:{type(e).__name__}", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

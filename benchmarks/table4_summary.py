@@ -1,0 +1,54 @@
+"""Paper Table 4: the headline geomean summary, side by side with the
+paper's numbers."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from . import common
+
+PAPER = {
+    "fullsystem/BHi": dict(total=3.32, walk=4.56, stall=5.68),
+    "fullsystem/BHi+Mig": dict(total=20.71, walk=12.38, stall=20.9),
+    "multitenant/BHi+Mig": dict(total=19.85, walk=32.62, stall=23.25),
+    "interleave/BHi": dict(total=10.02, walk=10.53, stall=9.01),
+    "thp/BHi": dict(total=51.82, walk=36.37, stall=38.63),
+}
+
+
+def main(quick: bool = False):
+    art = common.ART
+    rows = []
+    summary = {}
+
+    def geo(fig, policy, key):
+        data = json.loads((art / f"{fig}.json").read_text())
+        return common.geomean_improvement(
+            [data[w][policy]["improv"][key] for w in data])
+
+    specs = [
+        ("fullsystem/BHi", "fig9_fullsystem", "BHi"),
+        ("fullsystem/BHi+Mig", "fig9_fullsystem", "BHi+Mig"),
+        ("multitenant/BHi+Mig", "fig10_multitenant", "BHi+Mig"),
+        ("interleave/BHi", "fig11_interleave", "interleave+BHi"),
+        ("thp/BHi", "fig13_thp", "thp-BHi"),
+    ]
+    for label, fig, policy in specs:
+        try:
+            ours = {k: geo(fig, policy, k) for k in ("total", "walk", "stall")}
+        except FileNotFoundError:
+            continue
+        summary[label] = {"ours": ours, "paper": PAPER[label]}
+        p = PAPER[label]
+        rows.append((f"table4/{label}", 0.0,
+                     f"ours(total={ours['total']:.1f}%,walk={ours['walk']:.1f}%,"
+                     f"stall={ours['stall']:.1f}%) "
+                     f"paper(total={p['total']}%,walk={p['walk']}%,"
+                     f"stall={p['stall']}%)"))
+    common.emit(rows)
+    common.save_artifact("table4_summary", summary)
+    return summary
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""End-to-end driver: train a ~100M-parameter qwen-family model.
+
+    PYTHONPATH=src python examples/train_100m.py [--steps 300]
+
+Uses the full production stack: config -> sharded params -> AdamW ->
+microbatched train step -> periodic checkpoints -> resume.  On CPU this
+runs a few hundred steps in minutes; loss drops from ~ln(vocab) as the
+model learns the synthetic n-gram structure.
+"""
+import argparse
+import dataclasses
+import sys
+sys.path.insert(0, "src")
+
+from repro import configs
+from repro.launch import train as train_launch
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_100m_ckpt")
+    args = ap.parse_args()
+
+    # ~100M params: qwen1.5-0.5b topology, narrowed
+    base = configs.get_config("qwen1.5-0.5b")
+    cfg = dataclasses.replace(base, name="qwen-100m", d_model=512,
+                              n_heads=8, n_kv_heads=8, d_ff=1408,
+                              n_layers=12, vocab=32768)
+    configs.REGISTRY[cfg.name] = cfg
+    loss = train_launch.main([
+        "--arch", cfg.name, "--steps", str(args.steps),
+        "--global-batch", "16", "--seq-len", "256", "--lr", "1e-3",
+        "--microbatches", "2", "--ckpt-dir", args.ckpt_dir,
+        "--ckpt-every", "100", "--resume", "auto", "--log-every", "20"])
+    print(f"final loss: {loss:.4f}")
+
+
+if __name__ == "__main__":
+    main()

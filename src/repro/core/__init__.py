@@ -1,0 +1,19 @@
+"""Radiant core: page-table placement & migration for tiered memory.
+
+Faithful JAX reproduction of "Page Table Management for Heterogeneous
+Memory Systems" (Kumar et al., 2021).  See DESIGN.md section 2, Pillar A.
+"""
+from .config import (CostConfig, MachineConfig, PolicyConfig, FIRST_TOUCH,
+                     INTERLEAVE, PT_BIND_ALL, PT_BIND_HIGH, PT_FOLLOW_DATA,
+                     benchmark_machine, bhi, bhi_mig, bind_all, linux_default)
+from .sim import RunResult, TieredMemSimulator, Trace, pad_trace
+from .state import SimState, init_state, is_dram, same_tier
+from . import workloads
+
+__all__ = [
+    "CostConfig", "MachineConfig", "PolicyConfig", "FIRST_TOUCH",
+    "INTERLEAVE", "PT_BIND_ALL", "PT_BIND_HIGH", "PT_FOLLOW_DATA",
+    "benchmark_machine", "bhi", "bhi_mig", "bind_all", "linux_default",
+    "RunResult", "TieredMemSimulator", "Trace", "pad_trace",
+    "SimState", "init_state", "is_dram", "same_tier", "workloads",
+]

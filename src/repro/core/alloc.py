@@ -1,0 +1,118 @@
+"""Per-node page allocator with watermarks, slow path, reclaim and OOM.
+
+Mirrors the Linux buddy-allocator behaviors the paper measures:
+
+  * fast path when a node is above its low watermark,
+  * slow path (direct-reclaim attempt, ``alloc_slow`` cycles) below it,
+  * a small "reclaimable" reserve per node standing in for clean page cache,
+  * OOM when a *bound* allocation (PT bind-all) cannot be satisfied from the
+    allowed nodes even after reclaim (paper section 3.5, Fig. 7).
+
+Allocation preferences are length-4 node orders with -1 padding, so the same
+scalar routine serves first-touch (local DRAM -> remote DRAM -> local NVMM ->
+remote NVMM), interleave (rotating start node), and DRAM-only binds.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import (CostConfig, MachineConfig, FIRST_TOUCH, INTERLEAVE,
+                     PT_BIND_ALL, PT_BIND_HIGH)
+
+I32 = jnp.int32
+
+
+def watermark_pages(mc: MachineConfig) -> jax.Array:
+    cap = jnp.asarray(mc.node_capacity(), jnp.float32)
+    return (cap * mc.low_watermark).astype(I32)
+
+
+def first_touch_prefs(thread: jax.Array, n_threads: int) -> jax.Array:
+    """Zonelist order for a thread: its socket's DRAM, remote DRAM, local
+    NVMM, remote NVMM (paper Fig. 2 topology)."""
+    local = jnp.where(thread < n_threads // 2, 0, 1).astype(I32)
+    return jnp.stack([local, 1 - local, local + 2, 3 - local])
+
+
+def interleave_prefs(ptr: jax.Array) -> jax.Array:
+    """Round-robin start node with wrap-around fallback."""
+    start = (ptr % 4).astype(I32)
+    return (start + jnp.arange(4, dtype=I32)) % 4
+
+
+def dram_prefs(thread: jax.Array, n_threads: int) -> jax.Array:
+    """DRAM-only preference (for PT binds); -1 entries are invalid."""
+    local = jnp.where(thread < n_threads // 2, 0, 1).astype(I32)
+    return jnp.stack([local, 1 - local,
+                      jnp.asarray(-1, I32), jnp.asarray(-1, I32)])
+
+
+def alloc_one(node_free: jax.Array, node_reclaimable: jax.Array,
+              prefs: jax.Array, wm: jax.Array, ignore_wm: jax.Array
+              ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Allocate a single page following ``prefs`` (i32[4], -1 = skip).
+
+    Returns (node, slow, new_free, new_reclaimable, ok).  ``node`` is -1 on
+    failure.  ``slow`` flags the watermark slow path (or a reclaim), charged
+    ``alloc_slow`` cycles by the caller.  Deterministic: first acceptable
+    node in preference order wins.
+    """
+    valid = prefs >= 0
+    safe_prefs = jnp.where(valid, prefs, 0)
+    free_p = jnp.where(valid, node_free[safe_prefs], -1)
+    wm_p = jnp.where(ignore_wm, 0, wm[safe_prefs])
+    rec_p = jnp.where(valid, node_reclaimable[safe_prefs], 0)
+
+    above = valid & (free_p > wm_p)
+    has_page = valid & (free_p > 0)
+    has_reclaim = valid & (rec_p > 0)
+
+    fast_ok = jnp.any(above)
+    slow_ok = jnp.any(has_page)
+    rec_ok = jnp.any(has_reclaim)
+
+    pick_fast = safe_prefs[jnp.argmax(above)]
+    pick_slow = safe_prefs[jnp.argmax(has_page)]
+    pick_rec = safe_prefs[jnp.argmax(has_reclaim)]
+
+    node = jnp.where(fast_ok, pick_fast,
+                     jnp.where(slow_ok, pick_slow,
+                               jnp.where(rec_ok, pick_rec, -1)))
+    ok = fast_ok | slow_ok | rec_ok
+    slow = ok & ~fast_ok
+    from_reclaim = ok & ~fast_ok & ~slow_ok
+
+    dec = jnp.zeros((4,), I32).at[jnp.clip(node, 0, 3)].add(
+        jnp.where(ok & ~from_reclaim, 1, 0))
+    dec_rec = jnp.zeros((4,), I32).at[jnp.clip(node, 0, 3)].add(
+        jnp.where(from_reclaim, 1, 0))
+    return node, slow, node_free - dec, node_reclaimable - dec_rec, ok
+
+
+def data_prefs_for(policy: str, thread: jax.Array, n_threads: int,
+                   interleave_ptr: jax.Array) -> jax.Array:
+    if policy == INTERLEAVE:
+        return interleave_prefs(interleave_ptr)
+    if policy == FIRST_TOUCH:
+        return first_touch_prefs(thread, n_threads)
+    raise ValueError(f"unknown data policy {policy!r}")
+
+
+def pt_prefs_for(pt_policy: str, level_is_upper: bool, thread: jax.Array,
+                 n_threads: int, data_prefs: jax.Array,
+                 thp: bool) -> Tuple[jax.Array, bool]:
+    """Preference order for a PT page allocation.
+
+    Returns (prefs, ignore_wm).  ``level_is_upper`` marks root/top/mid pages
+    (plus the leaf under THP, where the PMD *is* the leaf and BHi binds it —
+    paper section 6.6).
+    """
+    if pt_policy == PT_BIND_ALL:
+        return dram_prefs(thread, n_threads), True
+    if pt_policy == PT_BIND_HIGH and (level_is_upper or thp):
+        return dram_prefs(thread, n_threads), True
+    # Linux default: PT pages follow the data-page policy (paper section 3.2).
+    return data_prefs, False

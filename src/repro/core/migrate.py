@@ -1,0 +1,285 @@
+"""Data-page balancing (AutoNUMA model) and Algorithm-1 leaf-PT migration.
+
+Semantics (deterministic, mirrored exactly by ``core.ref`` and the paper's
+description in sections 4.3-4.4 / 5.2-5.3):
+
+  * Every ``autonuma_period`` steps a scan runs: the hottest NVMM-resident
+    data pages (``access_recent`` >= threshold) are promoted to DRAM, bounded
+    by the scan budget and free DRAM above the watermark; optionally the
+    coldest DRAM pages are demoted first to make room (exchange mode).
+  * All data migrations of a scan are applied as one batch (the kernel also
+    batches via ``migrate_pages``), then each completed migration *triggers*
+    Algorithm 1 for its leaf PT page, in batch order:
+      - only the first trigger per leaf page evaluates/migrates (the paper's
+        "first data page migrated triggers; the other 511 find the PTE page
+        already in the destination" — Table 5);
+      - skip if already on the destination node, or on the same tier
+        ("with in DRAM"), or if demoting while any sibling data page is
+        still DRAM-resident (Alg. 1 line 18);
+      - concurrent triggers under one mid-level (PMD) page model the
+        ``try_lock`` race: the earliest wins, later ones are lock-skips
+        (section 5.3).
+  * Migrated leaf pages cost a page copy + fixed overhead + a TLB/PWC
+    shootdown; affected translation-cache entries are invalidated.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import tlbs
+from .config import CostConfig, MachineConfig, PolicyConfig
+from .state import SimState, is_dram, same_tier
+
+I32 = jnp.int32
+F32 = jnp.float32
+
+
+def _read_lat(cc: CostConfig, node: jax.Array) -> jax.Array:
+    return jnp.where(is_dram(node), cc.dram_read, cc.nvmm_read).astype(F32)
+
+
+def _write_lat(cc: CostConfig, node: jax.Array) -> jax.Array:
+    return jnp.where(is_dram(node), cc.dram_write, cc.nvmm_write).astype(F32)
+
+
+def _split_two(n: jax.Array, cap_a: jax.Array, cap_b: jax.Array
+               ) -> jax.Array:
+    """How many of ``n`` items go to the first of two nodes.
+
+    Fills the node with more headroom first; deterministic and
+    capacity-respecting given n <= cap_a + cap_b.
+    """
+    a_first = cap_a >= cap_b
+    share_a = jnp.where(a_first, jnp.minimum(cap_a, n),
+                        n - jnp.minimum(cap_b, n))
+    return jnp.maximum(share_a, 0)
+
+
+def _rank_key(count: jax.Array, idx_bits: int) -> jax.Array:
+    """Composite int32 sort key: clipped count then low index tie-break."""
+    n = 1 << idx_bits
+    idx = jnp.arange(count.shape[0], dtype=I32)
+    return (jnp.clip(count, 0, 255) << idx_bits) | (n - 1 - idx)
+
+
+def autonuma_scan(st: SimState, mc: MachineConfig, cc: CostConfig,
+                  pc: PolicyConfig, wm: jax.Array) -> Tuple[SimState, jax.Array]:
+    """One AutoNUMA scan + (optionally) Algorithm-1 triggers.
+
+    Returns the new state and the total migration cycles of this scan (the
+    caller spreads them over threads: the migration daemon steals CPU time).
+    """
+    n_map = st.data_node.shape[0]
+    B = min(pc.autonuma_budget, n_map)
+    idx_bits = max(n_map - 1, 1).bit_length()
+
+    on_nvmm = (st.data_node >= 2)
+    hot_count = jnp.where(on_nvmm & (st.access_recent >= pc.autonuma_threshold),
+                          st.access_recent, 0)
+    hot_key = jnp.where(hot_count > 0, _rank_key(hot_count, idx_bits), -1)
+    _, hot_pages = jax.lax.top_k(hot_key, B)
+    hot_valid = jnp.take(hot_key, hot_pages) > 0
+    n_hot = jnp.sum(hot_valid.astype(I32))
+
+    # Cold DRAM victims (exchange mode only).
+    on_dram = is_dram(st.data_node)
+    cold_score = jnp.where(on_dram, 255 - jnp.clip(st.access_recent, 0, 255), 0)
+    cold_key = jnp.where(on_dram, _rank_key(cold_score, idx_bits), -1)
+    _, cold_pages = jax.lax.top_k(cold_key, B)
+    cold_valid = jnp.take(cold_key, cold_pages) >= 0
+
+    excess0 = jnp.maximum(st.node_free[0] - wm[0], 0)
+    excess1 = jnp.maximum(st.node_free[1] - wm[1], 0)
+    dram_excess = excess0 + excess1
+
+    n_promote_want = jnp.minimum(n_hot, B)
+    need_demote = jnp.maximum(n_promote_want - dram_excess, 0)
+    n_victims = jnp.sum(cold_valid.astype(I32))
+    nvmm_room = jnp.maximum(st.node_free[2], 0) + jnp.maximum(st.node_free[3], 0)
+    n_demote = jnp.where(pc.autonuma_exchange,
+                         jnp.minimum(jnp.minimum(need_demote, n_victims),
+                                     nvmm_room), 0)
+    n_promote = jnp.minimum(n_promote_want, dram_excess + n_demote)
+
+    # ---- apply demotions ---------------------------------------------------
+    k = jnp.arange(B, dtype=I32)
+    dem_mask = k < n_demote
+    dem_pages = cold_pages
+    share2 = _split_two(n_demote, st.node_free[2], st.node_free[3])
+    dem_dest = jnp.where(k < share2, 2, 3).astype(I32)
+    dem_src = jnp.take(st.data_node, dem_pages)
+
+    data_node = st.data_node.at[dem_pages].set(
+        jnp.where(dem_mask, dem_dest, jnp.take(st.data_node, dem_pages)))
+    free_delta = (jnp.zeros((4,), I32)
+                  .at[jnp.clip(dem_src, 0, 3)].add(dem_mask.astype(I32))
+                  .at[dem_dest].add(-dem_mask.astype(I32)))
+    ldc = st.leaf_dram_children.at[dem_pages >> mc.radix_bits].add(
+        jnp.where(dem_mask, -1, 0))
+
+    # ---- apply promotions ----------------------------------------------------
+    pro_mask = (k < n_promote) & hot_valid
+    pro_pages = hot_pages
+    excess0b = jnp.maximum(st.node_free[0] + free_delta[0] - wm[0], 0)
+    excess1b = jnp.maximum(st.node_free[1] + free_delta[1] - wm[1], 0)
+    share0 = _split_two(n_promote, excess0b, excess1b)
+    pro_dest = jnp.where(k < share0, 0, 1).astype(I32)
+    pro_src = jnp.take(data_node, pro_pages)
+
+    data_node = data_node.at[pro_pages].set(
+        jnp.where(pro_mask, pro_dest, jnp.take(data_node, pro_pages)))
+    free_delta = (free_delta
+                  .at[jnp.clip(pro_src, 0, 3)].add(pro_mask.astype(I32))
+                  .at[pro_dest].add(-pro_mask.astype(I32)))
+    ldc = ldc.at[pro_pages >> mc.radix_bits].add(jnp.where(pro_mask, 1, 0))
+
+    n_data_migs = jnp.sum(dem_mask.astype(I32)) + jnp.sum(pro_mask.astype(I32))
+    mig_cost = jnp.sum(jnp.where(dem_mask, cc.migrate_fixed + cc.tlb_flush +
+                                 cc.copy_lines * (_read_lat(cc, dem_src) +
+                                                  _write_lat(cc, dem_dest)), 0.0))
+    mig_cost += jnp.sum(jnp.where(pro_mask, cc.migrate_fixed + cc.tlb_flush +
+                                  cc.copy_lines * (_read_lat(cc, pro_src) +
+                                                   _write_lat(cc, pro_dest)), 0.0))
+
+    # TLB shootdown for migrated data pages (non-migrated entries are routed
+    # out of range and dropped to avoid duplicate-scatter hazards).
+    map_flushed = jnp.zeros((n_map,), jnp.bool_)
+    map_flushed = map_flushed.at[jnp.where(dem_mask, dem_pages, n_map)].set(
+        True, mode="drop")
+    map_flushed = map_flushed.at[jnp.where(pro_mask, pro_pages, n_map)].set(
+        True, mode="drop")
+    l1_tlb = tlbs.invalidate_matching(st.l1_tlb, map_flushed, 0)
+    stlb = tlbs.invalidate_matching(st.stlb, map_flushed, 0)
+
+    counters = st.counters
+    counters = dataclasses_replace(counters,
+                                   data_migrations=counters.data_migrations + n_data_migs,
+                                   demotions=counters.demotions +
+                                   jnp.sum(dem_mask.astype(I32)))
+
+    st = dataclasses_replace(
+        st, data_node=data_node, leaf_dram_children=ldc,
+        node_free=st.node_free + free_delta, l1_tlb=l1_tlb, stlb=stlb,
+        counters=counters,
+        access_recent=st.access_recent // 2)  # hotness decay after the scan
+
+    # ---- Algorithm-1 triggers ------------------------------------------------
+    if pc.mig:
+        trig_pages = jnp.concatenate([dem_pages, pro_pages])
+        trig_dest = jnp.concatenate([dem_dest, pro_dest])
+        trig_mask = jnp.concatenate([dem_mask, pro_mask])
+        st, l4_cost = migrate_leaf_batch(st, mc, cc, trig_pages, trig_dest,
+                                         trig_mask)
+        mig_cost = mig_cost + l4_cost
+    return st, mig_cost
+
+
+def migrate_leaf_batch(st: SimState, mc: MachineConfig, cc: CostConfig,
+                       pages: jax.Array, dest: jax.Array, mask: jax.Array
+                       ) -> Tuple[SimState, jax.Array]:
+    """Vectorized Algorithm 1 over a batch of completed data migrations.
+
+    ``pages``/``dest``/``mask`` are i32[K]/i32[K]/bool[K] in trigger order.
+    """
+    K = pages.shape[0]
+    pos = jnp.arange(K, dtype=I32)
+    leaf = pages >> mc.radix_bits
+    lock_dom = leaf >> mc.lock_domain_shift   # PMD try-lock conflict domain
+    n_leaf = st.leaf_node.shape[0]
+
+    # First trigger per leaf page (in batch order) evaluates Algorithm 1.
+    order_key = jnp.where(mask, leaf * K + pos, jnp.iinfo(jnp.int32).max)
+    sort_idx = jnp.argsort(order_key)
+    sorted_leaf = jnp.take(jnp.where(mask, leaf, -1), sort_idx)
+    first_sorted = jnp.concatenate([jnp.ones((1,), jnp.bool_),
+                                    sorted_leaf[1:] != sorted_leaf[:-1]])
+    is_first = jnp.zeros((K,), jnp.bool_).at[sort_idx].set(first_sorted) & mask
+
+    l4_node = jnp.take(st.leaf_node, leaf)
+    already_dest = l4_node == dest
+    in_same_tier = same_tier(l4_node, dest) & ~already_dest
+    children_dram = jnp.take(st.leaf_dram_children, leaf)
+    sibling_guard = (~is_dram(dest)) & (children_dram > 0)
+
+    want = is_first & (l4_node >= 0) & ~already_dest & ~in_same_tier & ~sibling_guard
+
+    # PMD try_lock: among wants sharing a lock domain, earliest wins.
+    mid_key = jnp.where(want, lock_dom * K + pos, jnp.iinfo(jnp.int32).max)
+    mid_sort = jnp.argsort(mid_key)
+    sorted_mid = jnp.take(jnp.where(want, lock_dom, -1), mid_sort)
+    first_mid = jnp.concatenate([jnp.ones((1,), jnp.bool_),
+                                 sorted_mid[1:] != sorted_mid[:-1]])
+    lock_ok = jnp.zeros((K,), jnp.bool_).at[mid_sort].set(first_mid) & want
+    lock_skip = want & ~lock_ok
+
+    # Destination must have a free page (alloc_pages_node on dest).
+    dest_free = jnp.take(st.node_free, jnp.clip(dest, 0, 3))
+    can_alloc = dest_free > 0          # approximation: per-batch headroom
+    winner = lock_ok & can_alloc
+    alloc_fail = lock_ok & ~can_alloc
+
+    src = jnp.where(winner, l4_node, 0)
+    # winners are unique per leaf; non-winners are routed out of range so
+    # duplicate leaf ids cannot revert a winner's write
+    leaf_node = st.leaf_node.at[jnp.where(winner, leaf, n_leaf)].set(
+        dest, mode="drop")
+    free_delta = (jnp.zeros((4,), I32)
+                  .at[jnp.clip(src, 0, 3)].add(winner.astype(I32))
+                  .at[jnp.clip(dest, 0, 3)].add(-winner.astype(I32)))
+
+    cost = jnp.sum(jnp.where(winner,
+                             cc.migrate_fixed + cc.tlb_flush + cc.alloc_fast +
+                             cc.copy_lines * (_read_lat(cc, src) +
+                                              _write_lat(cc, dest)), 0.0))
+
+    # Shoot down translations covered by migrated leaf pages.  Winners are
+    # unique per leaf, so routing non-winners out of range avoids duplicate
+    # scatter hazards.
+    leaf_flushed = jnp.zeros((n_leaf,), jnp.bool_)
+    leaf_flushed = leaf_flushed.at[jnp.where(winner, leaf, n_leaf)].set(
+        True, mode="drop")
+    l1_tlb = tlbs.invalidate_matching(st.l1_tlb, leaf_flushed, mc.radix_bits)
+    stlb = tlbs.invalidate_matching(st.stlb, leaf_flushed, mc.radix_bits)
+    pde_pwc = tlbs.invalidate_matching(st.pde_pwc, leaf_flushed, 0)
+
+    # Skip-reason accounting (paper Table 5).  First triggers were judged
+    # against the pre-batch page table; the remaining triggers per leaf run
+    # "later" and are judged against the post-migration table — exactly the
+    # paper's "the first data page migrated triggers a PTE migration; for the
+    # rest, migration is not required as it is already in DRAM".
+    first_eval = is_first & (l4_node >= 0)
+    others = mask & ~is_first & (leaf >= 0)
+    new_l4 = jnp.take(leaf_node, leaf)
+    o_already = others & (new_l4 == dest)
+    o_tier = others & ~o_already & same_tier(new_l4, dest)
+    o_sibling = others & ~o_already & ~o_tier & (~is_dram(dest)) & (children_dram > 0)
+
+    c = st.counters
+    c = dataclasses_replace(
+        c,
+        l4_mig_success=c.l4_mig_success + jnp.sum(winner.astype(I32)),
+        l4_mig_already_dest=c.l4_mig_already_dest +
+        jnp.sum((first_eval & already_dest).astype(I32)) +
+        jnp.sum(o_already.astype(I32)),
+        l4_mig_in_dram=c.l4_mig_in_dram +
+        jnp.sum((first_eval & in_same_tier).astype(I32)) +
+        jnp.sum(o_tier.astype(I32)),
+        l4_mig_sibling_guard=c.l4_mig_sibling_guard +
+        jnp.sum((first_eval & ~already_dest & ~in_same_tier &
+                 sibling_guard).astype(I32)) + jnp.sum(o_sibling.astype(I32)),
+        l4_mig_lock_skip=c.l4_mig_lock_skip +
+        jnp.sum((lock_skip | alloc_fail).astype(I32)))
+
+    st = dataclasses_replace(st, leaf_node=leaf_node,
+                             node_free=st.node_free + free_delta,
+                             l1_tlb=l1_tlb, stlb=stlb, pde_pwc=pde_pwc,
+                             counters=c)
+    return st, cost
+
+
+def dataclasses_replace(obj, **kw):
+    import dataclasses as _dc
+    return _dc.replace(obj, **kw)

@@ -1,0 +1,490 @@
+"""The vectorized tiered-memory simulator.
+
+One ``lax.scan`` step simulates one memory access per CPU thread:
+
+  Phase 0   process-exit events (segment frees) and the periodic AutoNUMA
+            scan (+ Algorithm-1 triggers) — ``migrate.autonuma_scan``.
+  Phase A   *vectorized across threads*: accesses to already-mapped pages.
+            L1-TLB -> STLB -> hardware walk with PDE/PDPTE page-walk caches;
+            per-level walk costs depend on the NUMA node of each PT page
+            (the paper's object of study); data-access cost depends on the
+            data page's node, LLC-filtered.
+  Phase B   *sequential over threads* (a ``fori_loop``): page-fault handling
+            — PT-page and data-page allocation under the active policies,
+            zeroing costs, PTE install, TLB fill.  Thread order is the
+            serialization order (matching zone-lock serialization in the
+            kernel), and the pure-Python oracle replicates it exactly.
+
+Cycle model: ``total = cpu_work + stall (+ fault/alloc/migration overheads)``
+with ``stall = walk + data_stall_frac * data`` — page walks stall the
+pipeline fully (the PMH serializes translations, paper section 6.7:
+``walk_active/walk_pending -> stalls_mem_any``), data misses are partially
+hidden by out-of-order execution.
+
+Compiled artifacts are cached per (machine, cost, policy, trace-shape) so a
+benchmark sweeping policies over padded same-shape traces compiles each
+policy exactly once.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import alloc as alloc_mod
+from . import migrate as migrate_mod
+from . import tlbs
+from .config import (CostConfig, MachineConfig, PolicyConfig, INTERLEAVE,
+                     PT_BIND_HIGH, PT_FOLLOW_DATA)
+from .state import SimState, init_state, is_dram
+
+I32 = jnp.int32
+F32 = jnp.float32
+U32 = jnp.uint32
+
+_MIX = (np.uint32(0x9E3779B1), np.uint32(0x85EBCA77), np.uint32(0xC2B2AE3D),
+        np.uint32(0x27D4EB2F))
+
+
+def bern(p, site: int, *keys) -> jax.Array:
+    """Deterministic Bernoulli(p) from a multiplicative hash of the keys.
+
+    ``p`` may be a traced scalar.  Replicated bit-for-bit by ``core.ref``
+    (python ints masked to 32 bits).
+    """
+    h = jnp.asarray(np.uint32((0x811C9DC5 + 0x1000193 * site) & 0xFFFFFFFF), U32)
+    for i, k in enumerate(keys):
+        h = (h ^ jnp.asarray(k).astype(U32)) * _MIX[i % 4]
+    h = (h >> 8) & jnp.asarray(np.uint32(0xFFFFFF), U32)
+    thr = (jnp.asarray(p, F32) * (1 << 24)).astype(U32)
+    return h < thr
+
+
+@dataclasses.dataclass(frozen=True)
+class Trace:
+    """A pregenerated access trace (host-side numpy).
+
+    va[s, t]     4-KiB virtual page accessed by thread t at step s (-1 idle)
+    is_write     same shape
+    free_seg[s]  segment id whose pages are freed at the start of step s (-1)
+    llc[s]       data-access LLC hit probability at step s (phase-dependent)
+    seg_of_map   segment id per mapping granule (for frees)
+    """
+
+    va: np.ndarray
+    is_write: np.ndarray
+    free_seg: np.ndarray
+    llc: np.ndarray
+    seg_of_map: np.ndarray
+    name: str = "trace"
+    populate_steps: int = 0      # steps belonging to the populate/startup phase
+
+    @property
+    def n_steps(self) -> int:
+        return self.va.shape[0]
+
+
+def pad_trace(tr: Trace, n_steps: int) -> Trace:
+    """Idle-pad a trace to ``n_steps`` so policy sweeps share one compile."""
+    cur = tr.n_steps
+    if cur >= n_steps:
+        return tr
+    pad = n_steps - cur
+    return dataclasses.replace(
+        tr,
+        va=np.concatenate([tr.va, np.full((pad, tr.va.shape[1]), -1, np.int32)]),
+        is_write=np.concatenate([tr.is_write,
+                                 np.zeros((pad, tr.va.shape[1]), bool)]),
+        free_seg=np.concatenate([tr.free_seg, np.full((pad,), -1, np.int32)]),
+        llc=np.concatenate([tr.llc, np.zeros((pad,), np.float32)]))
+
+
+@dataclasses.dataclass
+class RunResult:
+    final_state: SimState          # host-side pytree of numpy arrays
+    timeline: Dict[str, np.ndarray]
+    trace_name: str
+    policy_label: str
+
+    def summary(self) -> Dict[str, float]:
+        st = self.final_state
+        cyc = st.cycles
+        # Migration-daemon cycles were already spread into per-thread totals
+        # inside the step function; ``migration_cycles`` is informational.
+        total = float(np.sum(cyc.total))
+        runtime = float(np.max(cyc.total))
+        walk = float(np.sum(cyc.walk))
+        stall = float(np.sum(cyc.stall))
+        c = st.counters
+        leaf_nodes = np.asarray(st.leaf_node)
+        alive = leaf_nodes >= 0
+        data = np.asarray(st.data_node)
+        return {
+            "runtime_cycles": runtime,
+            "total_cycles": total,
+            "walk_cycles": walk,
+            "stall_cycles": stall,
+            "data_mem_cycles": float(np.sum(cyc.data_mem)),
+            "fault_cycles": float(np.sum(cyc.fault)),
+            "migration_cycles": float(cyc.migration),
+            "walk_share": walk / max(total, 1.0),
+            "l1_hits": int(c.l1_hits), "stlb_hits": int(c.stlb_hits),
+            "walks": int(c.walks), "walk_mem_reads": int(c.walk_mem_reads),
+            "faults": int(c.faults),
+            "slow_allocs": int(c.slow_allocs),
+            "data_migrations": int(c.data_migrations),
+            "demotions": int(c.demotions),
+            "l4_mig_success": int(c.l4_mig_success),
+            "l4_mig_already_dest": int(c.l4_mig_already_dest),
+            "l4_mig_in_dram": int(c.l4_mig_in_dram),
+            "l4_mig_sibling_guard": int(c.l4_mig_sibling_guard),
+            "l4_mig_lock_skip": int(c.l4_mig_lock_skip),
+            "oom_killed": bool(st.oom_killed), "oom_step": int(st.oom_step),
+            "leaf_pages_dram": int(np.sum(alive & (leaf_nodes < 2))),
+            "leaf_pages_nvmm": int(np.sum(alive & (leaf_nodes >= 2))),
+            "data_pages_dram": int(np.sum((data >= 0) & (data < 2))),
+            "data_pages_nvmm": int(np.sum(data >= 2)),
+        }
+
+
+_RUN_CACHE: Dict[Tuple, object] = {}
+
+TIMELINE_KEYS = ("total_cycles", "walk_cycles", "stall_cycles", "faults",
+                 "dram_free", "leaf_nvmm", "leaf_dram", "walks",
+                 "data_migrations", "l4_mig_success", "migration_cycles",
+                 "data_mem_cycles", "fault_cycles", "l1_hits", "stlb_hits")
+
+
+def _build_step(mc: MachineConfig, cc: CostConfig, pc: PolicyConfig):
+    T = mc.n_threads
+    shift = mc.map_shift
+    n_map = mc.n_map
+    rb = mc.radix_bits
+    thp = mc.page_order > 0
+    wm = alloc_mod.watermark_pages(mc)
+
+    def read_lat(node):
+        return jnp.where(is_dram(node), cc.dram_read, cc.nvmm_read).astype(F32)
+
+    def write_lat(node):
+        return jnp.where(is_dram(node), cc.dram_write, cc.nvmm_write).astype(F32)
+
+    # ------------------------------ phase A --------------------------------
+    def phase_a(st: SimState, va_row, w_row, llc_rate):
+        m = jnp.clip(jnp.where(va_row >= 0, va_row >> shift, 0), 0, n_map - 1)
+        tid = jnp.arange(T, dtype=I32)
+        mapped = jnp.take(st.data_node, m) >= 0
+        active = (va_row >= 0) & ~st.oom_killed
+        vec = active & mapped
+        now = st.step
+
+        hit1, way1 = tlbs.lookup(st.l1_tlb, m)
+        hit2, way2 = tlbs.lookup(st.stlb, m)
+        walkn = vec & ~hit1 & ~hit2
+
+        leaf_id, mid_id = m >> rb, m >> (2 * rb)
+        top_id = m >> (3 * rb)
+        pde_hit, pde_way = tlbs.lookup(st.pde_pwc, leaf_id)
+        pdpte_hit, pdpte_way = tlbs.lookup(st.pdpte_pwc, mid_id)
+
+        leaf_n = jnp.take(st.leaf_node, leaf_id)
+        mid_n = jnp.take(st.mid_node, jnp.clip(mid_id, 0, st.mid_node.shape[0] - 1))
+        top_n = jnp.take(st.top_node, jnp.clip(top_id, 0, st.top_node.shape[0] - 1))
+
+        leaf_llc = bern(cc.leaf_llc_hit, 1, m, now, tid)
+        up1_llc = bern(cc.upper_llc_hit, 2, mid_id, now, tid)
+        up2_llc = bern(cc.upper_llc_hit, 3, top_id, now, tid)
+
+        leaf_read = jnp.where(leaf_llc, float(cc.llc_hit), read_lat(leaf_n))
+        mid_read = jnp.where(pde_hit, 0.0,
+                             jnp.where(up1_llc, float(cc.llc_hit), read_lat(mid_n)))
+        full = ~pde_hit & ~pdpte_hit
+        if thp:
+            top_read = jnp.zeros((T,), F32)
+        else:
+            top_read = jnp.where(full,
+                                 jnp.where(up2_llc, float(cc.llc_hit),
+                                           read_lat(top_n)), 0.0)
+        root_read = jnp.where(full, float(cc.llc_hit), 0.0)
+        walk_cost = jnp.where(walkn, leaf_read + mid_read + top_read + root_read, 0.0)
+        walk_reads = jnp.where(
+            walkn,
+            (~leaf_llc).astype(I32) + (~pde_hit & ~up1_llc).astype(I32)
+            + ((full & ~up2_llc).astype(I32) if not thp else 0),
+            0)
+
+        data_n = jnp.take(st.data_node, m)
+        data_llc = bern(llc_rate, 4, m, now, tid)
+        mem_lat = jnp.where(w_row, write_lat(data_n), read_lat(data_n))
+        data_cost = jnp.where(vec, jnp.where(data_llc, float(cc.llc_hit), mem_lat), 0.0)
+
+        tlb_penalty = jnp.where(vec & ~hit1, float(cc.stlb_hit), 0.0)
+        stall = walk_cost + cc.data_stall_frac * data_cost
+        total = jnp.where(vec, float(cc.cpu_work), 0.0) + tlb_penalty + stall
+
+        l1_tlb = tlbs.update(st.l1_tlb, m, way1, now, vec)
+        stlb = tlbs.update(st.stlb, m, way2, now, vec & ~hit1)
+        pde = tlbs.update(st.pde_pwc, leaf_id, pde_way, now, walkn)
+        pdpte = tlbs.update(st.pdpte_pwc, mid_id, pdpte_way, now, walkn)
+
+        access_recent = st.access_recent.at[
+            jnp.where(vec, m, n_map)].add(1, mode="drop")
+
+        cyc = st.cycles
+        cyc = dataclasses.replace(
+            cyc, total=cyc.total + total, walk=cyc.walk + walk_cost,
+            stall=cyc.stall + stall, data_mem=cyc.data_mem + data_cost)
+        c = st.counters
+        c = dataclasses.replace(
+            c,
+            l1_hits=c.l1_hits + jnp.sum((vec & hit1).astype(I32)),
+            stlb_hits=c.stlb_hits + jnp.sum((vec & ~hit1 & hit2).astype(I32)),
+            walks=c.walks + jnp.sum(walkn.astype(I32)),
+            walk_mem_reads=c.walk_mem_reads + jnp.sum(walk_reads))
+        st = dataclasses.replace(st, l1_tlb=l1_tlb, stlb=stlb, pde_pwc=pde,
+                                 pdpte_pwc=pdpte, access_recent=access_recent,
+                                 cycles=cyc, counters=c)
+        return st, active & ~mapped
+
+    # ------------------------------ phase B --------------------------------
+    def _alloc_pt_level(st: SimState, t, node_arr, idx, is_upper: bool,
+                        cost_acc):
+        missing = node_arr[idx] < 0
+        # recompute per allocation: the interleave cursor advances with
+        # every page handed out (PT pages consume round-robin slots too,
+        # paper section 3.2 / Fig. 5)
+        data_prefs = alloc_mod.data_prefs_for(pc.data_policy, t, T,
+                                              st.interleave_ptr)
+        prefs, ignore_wm = alloc_mod.pt_prefs_for(
+            pc.pt_policy, is_upper, t, T, data_prefs, thp)
+        node, slow, nf, nr, ok = alloc_mod.alloc_one(
+            st.node_free, st.node_reclaimable, prefs, wm,
+            jnp.asarray(ignore_wm))
+        if pc.pt_policy == PT_BIND_HIGH and (is_upper or thp):
+            node2, slow2, nf2, nr2, ok2 = alloc_mod.alloc_one(
+                st.node_free, st.node_reclaimable, data_prefs, wm,
+                jnp.asarray(False))
+            use_fb = ~ok
+            node = jnp.where(use_fb, node2, node)
+            slow = jnp.where(use_fb, slow2, slow)
+            nf = jnp.where(use_fb, nf2, nf)
+            nr = jnp.where(use_fb, nr2, nr)
+            ok = ok | ok2
+        oom = missing & ~ok            # bind_all pathology (section 3.5)
+        do = missing & ok
+        node_arr = node_arr.at[idx].set(jnp.where(do, node, node_arr[idx]))
+        zero_cost = jnp.where(do, cc.zero_lines * write_lat(node), 0.0)
+        acost = jnp.where(do, jnp.where(slow, float(cc.alloc_slow),
+                                        float(cc.alloc_fast)), 0.0)
+        adv = do & jnp.asarray(pc.pt_policy == PT_FOLLOW_DATA
+                               and pc.data_policy == INTERLEAVE)
+        st = dataclasses.replace(
+            st,
+            node_free=jnp.where(do, nf, st.node_free),
+            node_reclaimable=jnp.where(do, nr, st.node_reclaimable),
+            interleave_ptr=st.interleave_ptr + adv.astype(I32),
+            oom_killed=st.oom_killed | oom,
+            oom_step=jnp.where(oom & (st.oom_step < 0), st.step, st.oom_step),
+            counters=dataclasses.replace(
+                st.counters,
+                pt_allocs=st.counters.pt_allocs.at[jnp.clip(node, 0, 3)].add(
+                    jnp.where(do, 1, 0)),
+                slow_allocs=st.counters.slow_allocs + jnp.where(do & slow, 1, 0),
+                oom_kills=st.counters.oom_kills + oom.astype(I32)))
+        cost_acc = cost_acc + zero_cost + acost + jnp.where(
+            oom, float(cc.oom_scan), 0.0)
+        return st, node_arr, cost_acc
+
+    def phase_b_body(t, carry):
+        st, va_row, w_row, fault_mask = carry
+        va_t = va_row[t]
+        m = jnp.clip(jnp.where(va_t >= 0, va_t >> shift, 0), 0, n_map - 1)
+        do = fault_mask[t] & ~st.oom_killed
+        now = st.step
+
+        now_mapped = st.data_node[m] >= 0
+        wait = do & now_mapped
+        fault = do & ~now_mapped
+        wait_cost = jnp.where(wait, cc.fault_base + float(cc.llc_hit), 0.0)
+
+        tI = jnp.asarray(t, I32)
+
+        def run_fault(st):
+            c = jnp.zeros((), F32)
+            st2, root, c = _alloc_pt_level(st, tI, st.root_node, 0, True, c)
+            st2 = dataclasses.replace(st2, root_node=root)
+            st2, top, c = _alloc_pt_level(
+                st2, tI, st2.top_node,
+                jnp.clip(m >> (3 * rb), 0, st2.top_node.shape[0] - 1), True, c)
+            st2 = dataclasses.replace(st2, top_node=top)
+            st2, mid, c = _alloc_pt_level(
+                st2, tI, st2.mid_node,
+                jnp.clip(m >> (2 * rb), 0, st2.mid_node.shape[0] - 1), True, c)
+            st2 = dataclasses.replace(st2, mid_node=mid)
+            st2, leaf, c = _alloc_pt_level(st2, tI, st2.leaf_node, m >> rb,
+                                           False, c)
+            st2 = dataclasses.replace(st2, leaf_node=leaf)
+
+            dprefs = alloc_mod.data_prefs_for(
+                pc.data_policy, tI, T, st2.interleave_ptr)
+            node, slow, nf, nr, ok = alloc_mod.alloc_one(
+                st2.node_free, st2.node_reclaimable, dprefs, wm,
+                jnp.asarray(False))
+            oom = ~ok
+            data_node = st2.data_node.at[m].set(jnp.where(ok, node, -1))
+            ldc = st2.leaf_dram_children.at[m >> rb].add(
+                jnp.where(ok & is_dram(node), 1, 0))
+            adv = jnp.asarray(pc.data_policy == INTERLEAVE) & ok
+            c = c + jnp.where(ok, cc.zero_lines * write_lat(node)
+                              + jnp.where(slow, float(cc.alloc_slow),
+                                          float(cc.alloc_fast)),
+                              float(cc.oom_scan))
+            mid_n = st2.mid_node[jnp.clip(m >> (2 * rb), 0, st2.mid_node.shape[0] - 1)]
+            leaf_n = st2.leaf_node[m >> rb]
+            c = c + cc.fault_base + read_lat(mid_n) + write_lat(leaf_n)
+            st2 = dataclasses.replace(
+                st2, data_node=data_node, leaf_dram_children=ldc,
+                node_free=jnp.where(ok, nf, st2.node_free),
+                node_reclaimable=jnp.where(ok, nr, st2.node_reclaimable),
+                interleave_ptr=st2.interleave_ptr + adv.astype(I32),
+                oom_killed=st2.oom_killed | oom,
+                oom_step=jnp.where(oom & (st2.oom_step < 0), st2.step,
+                                   st2.oom_step),
+                counters=dataclasses.replace(
+                    st2.counters,
+                    data_allocs=st2.counters.data_allocs.at[
+                        jnp.clip(node, 0, 3)].add(jnp.where(ok, 1, 0)),
+                    faults=st2.counters.faults + 1,
+                    oom_kills=st2.counters.oom_kills + oom.astype(I32)))
+            return st2, c
+
+        st, fcost = jax.lax.cond(fault, run_fault,
+                                 lambda s: (s, jnp.zeros((), F32)), st)
+
+        handled = wait | fault
+        l1 = tlbs.update_one(st.l1_tlb, tI, m, now, handled)
+        stlb_ = tlbs.update_one(st.stlb, tI, m, now, handled)
+        pde = tlbs.update_one(st.pde_pwc, tI, m >> rb, now, handled)
+        pdpte = tlbs.update_one(st.pdpte_pwc, tI, m >> (2 * rb), now, handled)
+        access_recent = st.access_recent.at[m].add(jnp.where(handled, 1, 0))
+
+        all_cost = fcost + wait_cost
+        cyc = st.cycles
+        cyc = dataclasses.replace(
+            cyc,
+            total=cyc.total.at[t].add(all_cost),
+            fault=cyc.fault.at[t].add(all_cost),
+            data_mem=cyc.data_mem.at[t].add(jnp.where(wait, float(cc.llc_hit), 0.0)))
+        st = dataclasses.replace(st, l1_tlb=l1, stlb=stlb_, pde_pwc=pde,
+                                 pdpte_pwc=pdpte, access_recent=access_recent,
+                                 cycles=cyc)
+        return st, va_row, w_row, fault_mask
+
+    # ------------------------------ frees -----------------------------------
+    def free_segment(st: SimState, fid, seg_of_map, seg_of_leaf):
+        mask_map = (seg_of_map == fid) & (st.data_node >= 0)
+        freed_per_node = jnp.zeros((4,), I32).at[
+            jnp.clip(st.data_node, 0, 3)].add(mask_map.astype(I32))
+        freed_dram = mask_map & is_dram(st.data_node)
+        ldc = st.leaf_dram_children.at[jnp.arange(n_map) >> rb].add(
+            -freed_dram.astype(I32))
+        data_node = jnp.where(mask_map, -1, st.data_node)
+        mask_leaf = (seg_of_leaf == fid) & (st.leaf_node >= 0)
+        freed_leaf = jnp.zeros((4,), I32).at[
+            jnp.clip(st.leaf_node, 0, 3)].add(mask_leaf.astype(I32))
+        leaf_node = jnp.where(mask_leaf, -1, st.leaf_node)
+        l1 = tlbs.invalidate_matching(st.l1_tlb, mask_map, 0)
+        stlb_ = tlbs.invalidate_matching(st.stlb, mask_map, 0)
+        pde = tlbs.invalidate_matching(st.pde_pwc, mask_leaf, 0)
+        return dataclasses.replace(
+            st, data_node=data_node, leaf_node=leaf_node,
+            leaf_dram_children=jnp.maximum(ldc, 0),
+            node_free=st.node_free + freed_per_node + freed_leaf,
+            access_recent=jnp.where(mask_map, 0, st.access_recent),
+            l1_tlb=l1, stlb=stlb_, pde_pwc=pde)
+
+    # ------------------------------ full step --------------------------------
+    def step(st: SimState, x, seg_of_map, seg_of_leaf):
+        va_row, w_row, fid, llc_rate = x
+        st = jax.lax.cond(fid >= 0,
+                          lambda s: free_segment(s, fid, seg_of_map, seg_of_leaf),
+                          lambda s: s, st)
+        if pc.autonuma:
+            def scan_fn(s):
+                s2, cost = migrate_mod.autonuma_scan(s, mc, cc, pc, wm)
+                cyc = dataclasses.replace(
+                    s2.cycles,
+                    total=s2.cycles.total + cost * cc.mig_cost_scale / T,
+                    migration=s2.cycles.migration + cost)
+                return dataclasses.replace(s2, cycles=cyc)
+            st = jax.lax.cond(
+                (st.step > 0) & (st.step % pc.autonuma_period == 0)
+                & ~st.oom_killed, scan_fn, lambda s: s, st)
+
+        st, fault_mask = phase_a(st, va_row, w_row, llc_rate)
+
+        def run_phase_b(st):
+            st2, _, _, _ = jax.lax.fori_loop(
+                0, T, phase_b_body, (st, va_row, w_row, fault_mask))
+            return st2
+        # faults are bursty (populate) or rare (steady state): skip the
+        # sequential fault loop entirely on fault-free steps
+        st = jax.lax.cond(jnp.any(fault_mask), run_phase_b, lambda s: s, st)
+        st = dataclasses.replace(st, step=st.step + 1)
+
+        out = (jnp.sum(st.cycles.total), jnp.sum(st.cycles.walk),
+               jnp.sum(st.cycles.stall), st.counters.faults,
+               st.node_free[0] + st.node_free[1],
+               jnp.sum((st.leaf_node >= 2).astype(I32)),
+               jnp.sum(((st.leaf_node >= 0) & (st.leaf_node < 2)).astype(I32)),
+               st.counters.walks, st.counters.data_migrations,
+               st.counters.l4_mig_success, st.cycles.migration,
+               jnp.sum(st.cycles.data_mem), jnp.sum(st.cycles.fault),
+               st.counters.l1_hits, st.counters.stlb_hits)
+        return st, out
+
+    return step
+
+
+class TieredMemSimulator:
+    """Public facade: configure once, run traces under a policy bundle."""
+
+    def __init__(self, mc: MachineConfig = MachineConfig(),
+                 cc: CostConfig = CostConfig(),
+                 pc: PolicyConfig = PolicyConfig()):
+        self.mc, self.cc, self.pc = mc, cc, pc
+
+    def run(self, trace: Trace, state: Optional[SimState] = None) -> RunResult:
+        mc = self.mc
+        assert trace.va.shape[1] == mc.n_threads, \
+            f"trace has {trace.va.shape[1]} threads, machine {mc.n_threads}"
+        key = (self.mc, self.cc, self.pc)
+        if key not in _RUN_CACHE:
+            step = _build_step(*key)
+
+            @jax.jit
+            def run_all(st, xs, seg_of_map, seg_of_leaf):
+                def body(s, x):
+                    return step(s, x, seg_of_map, seg_of_leaf)
+                return jax.lax.scan(body, st, xs)
+
+            _RUN_CACHE[key] = run_all
+        run_all = _RUN_CACHE[key]
+
+        seg_of_map = jnp.asarray(trace.seg_of_map, I32)
+        n_leaf = mc.n_leaf_pages
+        leaf_first = (np.arange(n_leaf, dtype=np.int64) << mc.radix_bits) % max(mc.n_map, 1)
+        seg_of_leaf = seg_of_map[jnp.asarray(leaf_first, I32)]
+
+        st0 = state if state is not None else init_state(mc)
+        xs = (jnp.asarray(trace.va, I32), jnp.asarray(trace.is_write),
+              jnp.asarray(trace.free_seg, I32), jnp.asarray(trace.llc, F32))
+
+        final, outs = run_all(st0, xs, seg_of_map, seg_of_leaf)
+        final = jax.device_get(final)
+        timeline = {k: np.asarray(v) for k, v in zip(TIMELINE_KEYS, outs)}
+        return RunResult(final_state=final, timeline=timeline,
+                         trace_name=trace.name, policy_label=self.pc.label())

@@ -1,0 +1,151 @@
+"""Simulator state: placement arrays, allocator, translation caches, metrics.
+
+The page-table radix tree is *implicit*: for mapping granule ``m`` (a 4 KiB
+page, or a 2 MiB page under THP) the PT pages touched by a walk are
+
+    leaf page  ``m >> radix_bits``       (PTE page; PMD page under THP)
+    mid  page  ``m >> 2*radix_bits``     (PMD page; PUD page under THP)
+    top  page  ``m >> 3*radix_bits``     (PUD page; PGD under THP)
+    root page  ``0``        (PGD)
+
+so one int32 "NUMA node or -1" array per level encodes the whole tree.  This
+is exact for x86-style 512-ary radix tables and lets walks, placement
+queries, and Algorithm-1 conditions vectorize as gathers.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import tlbs
+from .config import MachineConfig
+
+I32 = jnp.int32
+F32 = jnp.float32
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Counters:
+    """Cumulative event counters (int32; exact at test scales)."""
+
+    l1_hits: jax.Array
+    stlb_hits: jax.Array
+    walks: jax.Array                 # hardware page walks (both-TLB misses)
+    walk_mem_reads: jax.Array        # PT-page memory reads issued by walks
+    faults: jax.Array
+    data_allocs: jax.Array           # i32[4] per node
+    pt_allocs: jax.Array             # i32[4] per node
+    slow_allocs: jax.Array
+    data_migrations: jax.Array       # successful data-page migrations
+    demotions: jax.Array
+    l4_mig_success: jax.Array        # Table-5 "Successful migration"
+    l4_mig_already_dest: jax.Array   # Table-5 "Already in destination"
+    l4_mig_in_dram: jax.Array        # Table-5 "With in DRAM" (same-tier skip)
+    l4_mig_sibling_guard: jax.Array  # Alg.1 line 18: a child is still in DRAM
+    l4_mig_lock_skip: jax.Array      # Alg.1/§5.3: PMD try_lock failed
+    oom_kills: jax.Array
+
+
+def zero_counters() -> Counters:
+    z = jnp.zeros((), I32)
+    return Counters(l1_hits=z, stlb_hits=z, walks=z, walk_mem_reads=z,
+                    faults=z, data_allocs=jnp.zeros((4,), I32),
+                    pt_allocs=jnp.zeros((4,), I32), slow_allocs=z,
+                    data_migrations=z, demotions=z, l4_mig_success=z,
+                    l4_mig_already_dest=z, l4_mig_in_dram=z,
+                    l4_mig_sibling_guard=z, l4_mig_lock_skip=z, oom_kills=z)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Cycles:
+    """Cumulative cycle accounting (float32: exact below 2^24 for oracle
+    tests; ~1e-7 relative at benchmark scales)."""
+
+    total: jax.Array        # f32[T] per-thread total cycles
+    walk: jax.Array         # f32[T] cycles the PMH spent walking
+    stall: jax.Array        # f32[T] memory-stall cycles (walk + exposed data)
+    data_mem: jax.Array     # f32[T] raw data-access memory cycles
+    fault: jax.Array        # f32[T] fault-handler cycles (incl. alloc, zero)
+    migration: jax.Array    # f32[]  background migration work (all threads)
+
+
+def zero_cycles(n_threads: int) -> Cycles:
+    z = jnp.zeros((n_threads,), F32)
+    return Cycles(total=z, walk=z, stall=z, data_mem=z, fault=z,
+                  migration=jnp.zeros((), F32))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SimState:
+    # --- placement: NUMA node per page, -1 = unallocated -------------------
+    data_node: jax.Array          # i32[n_map]
+    leaf_node: jax.Array          # i32[n_leaf]   PTE pages (PMD under THP)
+    mid_node: jax.Array           # i32[n_mid]
+    top_node: jax.Array           # i32[n_top]
+    root_node: jax.Array          # i32[1]
+    leaf_dram_children: jax.Array  # i32[n_leaf]  #mapped children on DRAM
+
+    # --- allocator ----------------------------------------------------------
+    node_free: jax.Array          # i32[4]
+    node_reclaimable: jax.Array   # i32[4] page-cache style reserve
+    interleave_ptr: jax.Array     # i32[] round-robin cursor
+    oom_killed: jax.Array         # bool[] OOM handler fired
+    oom_step: jax.Array           # i32[] step at which it fired (-1)
+
+    # --- hotness (AutoNUMA input) -------------------------------------------
+    access_recent: jax.Array      # i32[n_map], periodically halved
+
+    # --- translation caches -------------------------------------------------
+    l1_tlb: tlbs.TlbArray
+    stlb: tlbs.TlbArray
+    pde_pwc: tlbs.TlbArray
+    pdpte_pwc: tlbs.TlbArray
+
+    # --- accounting ----------------------------------------------------------
+    cycles: Cycles
+    counters: Counters
+    step: jax.Array               # i32[] global step (LRU timestamp)
+
+
+def init_state(mc: MachineConfig) -> SimState:
+    cap = jnp.asarray(mc.node_capacity(), I32)
+    reclaim = (cap.astype(F32) * mc.reclaimable_frac).astype(I32)
+    n_map = mc.n_map
+    n_leaf = mc.n_leaf_pages
+    n_mid = mc.n_mid_pages
+    n_top = mc.n_top_pages
+    return SimState(
+        data_node=jnp.full((n_map,), -1, I32),
+        leaf_node=jnp.full((n_leaf,), -1, I32),
+        mid_node=jnp.full((n_mid,), -1, I32),
+        top_node=jnp.full((n_top,), -1, I32),
+        root_node=jnp.full((1,), -1, I32),
+        leaf_dram_children=jnp.zeros((n_leaf,), I32),
+        node_free=cap - reclaim,
+        node_reclaimable=reclaim,
+        interleave_ptr=jnp.zeros((), I32),
+        oom_killed=jnp.zeros((), jnp.bool_),
+        oom_step=jnp.full((), -1, I32),
+        access_recent=jnp.zeros((n_map,), I32),
+        l1_tlb=tlbs.make_tlb(mc.n_threads, mc.l1_tlb_sets, mc.l1_tlb_ways),
+        stlb=tlbs.make_tlb(mc.n_threads, mc.stlb_sets, mc.stlb_ways),
+        pde_pwc=tlbs.make_tlb(mc.n_threads, 1, mc.pde_pwc_entries),
+        pdpte_pwc=tlbs.make_tlb(mc.n_threads, 1, mc.pdpte_pwc_entries),
+        cycles=zero_cycles(mc.n_threads),
+        counters=zero_counters(),
+        step=jnp.zeros((), I32),
+    )
+
+
+def is_dram(node: jax.Array) -> jax.Array:
+    """True for DRAM nodes (0, 1); NVMM nodes are 2, 3."""
+    return (node >= 0) & (node < 2)
+
+
+def same_tier(a: jax.Array, b: jax.Array) -> jax.Array:
+    return is_dram(a) == is_dram(b)

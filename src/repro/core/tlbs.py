@@ -1,0 +1,120 @@
+"""Vectorized, per-thread TLB and page-walk-cache (PWC) models.
+
+Every simulated CPU thread owns a private translation hierarchy:
+
+  * L1 dTLB           set-associative, tags are mapping-granule indices
+  * STLB (L2 TLB)     set-associative, checked on an L1 miss
+  * PDE  PWC          fully associative, caches pointers to *leaf* PT pages
+                      (tag = map_idx >> 9); a hit skips all upper levels
+  * PDPTE PWC         fully associative, caches pointers to mid-level pages
+                      (tag = map_idx >> 18); a hit skips root/top reads
+
+All structures are dense int32 arrays with a leading thread axis so lookups
+and updates vectorize across threads.  LRU is kept as a monotonically
+increasing timestamp (the global step counter); empty slots carry -1 so
+``argmin`` naturally selects empty-then-oldest with deterministic (lowest
+way) tie-breaking — a property the pure-Python oracle replicates exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TlbArray:
+    """One set-associative, per-thread translation cache."""
+
+    tags: jax.Array  # i32[T, sets, ways], -1 = invalid
+    lru: jax.Array   # i32[T, sets, ways], -1 = empty, else last-use step
+
+
+def make_tlb(n_threads: int, sets: int, ways: int) -> TlbArray:
+    shape = (n_threads, sets, ways)
+    return TlbArray(tags=jnp.full(shape, -1, jnp.int32),
+                    lru=jnp.full(shape, -1, jnp.int32))
+
+
+def _sets(tlb: TlbArray) -> int:
+    return tlb.tags.shape[1]
+
+
+def lookup(tlb: TlbArray, tag: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Vectorized lookup of one tag per thread.
+
+    Returns (hit: bool[T], way_or_victim: i32[T]).  ``way_or_victim`` is the
+    hitting way on a hit, else the LRU victim way for a subsequent insert.
+    """
+    set_idx = tag % _sets(tlb)                            # i32[T]
+    t_idx = jnp.arange(tlb.tags.shape[0])
+    set_tags = tlb.tags[t_idx, set_idx]                   # i32[T, ways]
+    set_lru = tlb.lru[t_idx, set_idx]
+    match = set_tags == tag[:, None]
+    hit = jnp.any(match, axis=1)
+    hit_way = jnp.argmax(match, axis=1)
+    victim_way = jnp.argmin(set_lru, axis=1)
+    return hit, jnp.where(hit, hit_way, victim_way)
+
+
+def update(tlb: TlbArray, tag: jax.Array, way: jax.Array, now: jax.Array,
+           active: jax.Array) -> TlbArray:
+    """Touch-or-insert ``tag`` at ``way`` for threads with ``active`` set."""
+    set_idx = tag % _sets(tlb)
+    t_idx = jnp.arange(tlb.tags.shape[0])
+    new_tags = tlb.tags.at[t_idx, set_idx, way].set(
+        jnp.where(active, tag, tlb.tags[t_idx, set_idx, way]))
+    new_lru = tlb.lru.at[t_idx, set_idx, way].set(
+        jnp.where(active, now, tlb.lru[t_idx, set_idx, way]))
+    return TlbArray(tags=new_tags, lru=new_lru)
+
+
+def update_one(tlb: TlbArray, thread: jax.Array, tag: jax.Array,
+               now: jax.Array, active: jax.Array) -> TlbArray:
+    """Scalar touch-or-insert for a single thread (used in the fault path)."""
+    sets = _sets(tlb)
+    set_idx = tag % sets
+    set_tags = jax.lax.dynamic_slice(tlb.tags, (thread, set_idx, 0),
+                                     (1, 1, tlb.tags.shape[2]))[0, 0]
+    set_lru = jax.lax.dynamic_slice(tlb.lru, (thread, set_idx, 0),
+                                    (1, 1, tlb.lru.shape[2]))[0, 0]
+    match = set_tags == tag
+    hit = jnp.any(match)
+    way = jnp.where(hit, jnp.argmax(match), jnp.argmin(set_lru))
+    new_tags = tlb.tags.at[thread, set_idx, way].set(
+        jnp.where(active, tag, tlb.tags[thread, set_idx, way]))
+    new_lru = tlb.lru.at[thread, set_idx, way].set(
+        jnp.where(active, now, tlb.lru[thread, set_idx, way]))
+    return TlbArray(tags=new_tags, lru=new_lru)
+
+
+def lookup_one(tlb: TlbArray, thread: jax.Array, tag: jax.Array) -> jax.Array:
+    """Scalar hit test for a single thread (no state change)."""
+    set_idx = tag % _sets(tlb)
+    set_tags = jax.lax.dynamic_slice(tlb.tags, (thread, set_idx, 0),
+                                     (1, 1, tlb.tags.shape[2]))[0, 0]
+    return jnp.any(set_tags == tag)
+
+
+def invalidate_matching(tlb: TlbArray, flushed_lookup: jax.Array,
+                        shift: int) -> TlbArray:
+    """Invalidate every entry whose ``tag >> shift`` indexes a set bit.
+
+    ``flushed_lookup`` is a bool[n] table; entry tags are right-shifted by
+    ``shift`` before indexing it.  This models targeted TLB shootdowns after
+    a data-page migration (shift=0, table over map granules) and after a
+    leaf-PT-page migration (shift=9, table over leaf PT pages).
+    """
+    valid = tlb.tags >= 0
+    idx = jnp.clip(tlb.tags >> shift, 0, flushed_lookup.shape[0] - 1)
+    kill = valid & flushed_lookup[idx]
+    return TlbArray(tags=jnp.where(kill, -1, tlb.tags),
+                    lru=jnp.where(kill, -1, tlb.lru))
+
+
+def flush_all(tlb: TlbArray) -> TlbArray:
+    return TlbArray(tags=jnp.full_like(tlb.tags, -1),
+                    lru=jnp.full_like(tlb.lru, -1))

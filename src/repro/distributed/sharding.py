@@ -1,0 +1,192 @@
+"""Logical-axis -> mesh-axis sharding rules (DP / TP / EP / CP).
+
+Parameters declare *logical* axes ("embed", "heads_mm", "ff", "experts",
+"vocab", ...); this module maps them onto physical mesh axes.  The default
+rule set is Megatron-style tensor parallelism on the "model" axis with data
+parallelism over ("pod", "data"):
+
+  heads_mm / kv_mm   attention projection columns  -> model
+  ff / inner*        MLP / Mamba hidden width      -> model
+  experts            MoE expert axis (EP)          -> model
+  vocab              embedding / LM head rows      -> model
+  embed / layers     replicated (row dimension)
+
+A logical dim is only sharded if its size divides the mesh axis; otherwise
+it silently falls back to replication (e.g. 56 heads on a 16-way model axis
+shard via the fused ``heads_mm`` column dim instead).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.modules import ParamSpec
+
+# logical axis -> mesh axis (None = replicate)
+DEFAULT_RULES: Dict[str, Optional[str]] = {
+    "vocab": "model",
+    "heads_mm": "model",
+    "kv_mm": "model",
+    "ff": "model",
+    "experts": "model",
+    "inner": "model",
+    "inner2": "model",
+    "heads": "model",
+    "embed": None,
+    "embed_out": None,
+    "layers": None,
+    "batch": ("pod", "data"),
+    "seq": None,
+}
+
+
+def mesh_axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def spec_for(spec: ParamSpec, mesh: Mesh,
+             rules: Optional[Dict] = None) -> P:
+    rules = rules or DEFAULT_RULES
+    out = []
+    used = set()
+    for dim, logical in zip(spec.shape, spec.logical_axes):
+        axis = rules.get(logical) if logical else None
+        if axis is not None and axis not in used \
+                and mesh_axis_size(mesh, axis) > 1 \
+                and dim % mesh_axis_size(mesh, axis) == 0:
+            out.append(axis)
+            used.add(axis)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def param_shardings(specs, mesh: Mesh, rules: Optional[Dict] = None):
+    """Pytree of NamedSharding matching a ParamSpec tree."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, spec_for(s, mesh, rules)),
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+FSDP_RULES: Dict[str, Optional[str]] = dict(
+    DEFAULT_RULES,
+    embed="data",       # shard the d_model dimension over DP (FSDP)
+    embed_out="data",
+)
+
+# Expert-parallel-over-data (hillclimb variant, EXPERIMENTS.md §Perf):
+# expert weights shard over ("data" x "model") via (E, ff), so they are
+# never re-gathered — tokens travel to experts via all-to-all instead of
+# weights traveling to tokens via all-gather.  Expert grads are wholly
+# owned per shard (no DP all-reduce).  Requires n_experts % data == 0.
+MOE_EP_RULES: Dict[str, Optional[str]] = dict(
+    FSDP_RULES,
+    experts="data",
+)
+
+# moe_ep + TP-resident non-expert weights: dense params are small enough
+# to live sharded-over-model only (no FSDP regather per microbatch).
+MOE_EP_TP_RULES: Dict[str, Optional[str]] = dict(
+    DEFAULT_RULES,
+    experts="data",
+)
+
+RULE_SETS = {"default": DEFAULT_RULES, "fsdp": FSDP_RULES,
+             "moe_ep": MOE_EP_RULES, "moe_ep_tp": MOE_EP_TP_RULES}
+
+
+def choose_rules(param_bytes: int, mesh: Mesh, mode: str = "serve",
+                 hbm_bytes: int = 16 << 30) -> Dict[str, Optional[str]]:
+    """TP-only if the cell's parameter-proportional state fits comfortably
+    per chip, else TP+FSDP.
+
+    Training carries ~7x the bf16 parameter bytes (params + f32 grads +
+    f32 Adam moments); serving carries 1x.
+    """
+    tp = mesh_axis_size(mesh, "model") if "model" in mesh.shape else 1
+    mult = 7.0 if mode == "train" else 1.0
+    if param_bytes * mult / tp < 0.35 * hbm_bytes:
+        return DEFAULT_RULES
+    return FSDP_RULES
+
+
+def opt_state_shardings(specs, mesh: Mesh, rules=None, factored=False):
+    """NamedShardings for the optimizer state, from the ParamSpec tree."""
+    m = param_shardings(specs, mesh, rules)
+    scalar = NamedSharding(mesh, P())
+    if not factored:
+        return {"m": m, "v": m, "step": scalar}
+
+    def reduce_spec(s: ParamSpec, keep):
+        shape = tuple(s.shape[i] for i in keep)
+        axes = tuple(s.logical_axes[i] for i in keep)
+        if not shape:
+            return NamedSharding(mesh, P())
+        return NamedSharding(
+            mesh, spec_for(ParamSpec(shape, axes, dtype="float32"), mesh,
+                           rules))
+
+    vr = jax.tree.map(
+        lambda s: reduce_spec(s, range(len(s.shape) - 1))
+        if len(s.shape) >= 2 else reduce_spec(s, range(len(s.shape))),
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    vc = jax.tree.map(
+        lambda s: reduce_spec(s, list(range(len(s.shape) - 2))
+                              + [len(s.shape) - 1])
+        if len(s.shape) >= 2 else NamedSharding(mesh, P()),
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    return {"m": m, "vr": vr, "vc": vc, "step": scalar}
+
+
+def data_sharding(mesh: Mesh, *, batch_axes=None) -> NamedSharding:
+    """Batch-leading arrays: shard dim 0 over DP axes."""
+    axes = batch_axes or tuple(a for a in ("pod", "data")
+                               if a in mesh.shape)
+    if len(axes) == 1:
+        axes = axes[0]
+    return NamedSharding(mesh, P(axes))
+
+
+def batch_specs(input_tree, mesh: Mesh) -> Dict:
+    """ShapeDtypeStruct tree -> NamedSharding tree (dim 0 = batch)."""
+    ds = data_sharding(mesh)
+
+    def one(s):
+        dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+        dp = dp[0] if len(dp) == 1 else dp
+        if s.shape and s.shape[0] % mesh_axis_size(mesh, dp) == 0:
+            return NamedSharding(mesh, P(dp, *([None] * (len(s.shape) - 1))))
+        return NamedSharding(mesh, P())
+    return jax.tree.map(one, input_tree)
+
+
+def kv_cache_sharding(mesh: Mesh, cache_tree):
+    """Decode-state shardings.
+
+    KV caches are [G, B, S, KH, Dh]: batch over DP; the *head_dim* over
+    "model" (always divisible by 16 for the assigned archs, unlike KH) —
+    the attention contraction over a sharded Dh becomes a psum, keeping
+    per-chip cache at B/dp x S x KH x Dh/tp.  SSM/RWKV states shard their
+    inner width over "model" and batch over DP.
+    """
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    dp = dp[0] if len(dp) == 1 else dp
+    tp = "model" if "model" in mesh.shape else None
+
+    def one(s):
+        shape = s.shape
+        dims = [None] * len(shape)
+        if len(shape) >= 2 and shape[1] % mesh_axis_size(mesh, dp) == 0:
+            dims[1] = dp                     # batch dim (after group stack)
+        # shard the trailing width over model if divisible
+        if tp and len(shape) >= 3 and shape[-1] % mesh_axis_size(mesh, tp) == 0:
+            dims[-1] = tp
+        return NamedSharding(mesh, P(*dims))
+    return jax.tree.map(one, cache_tree)

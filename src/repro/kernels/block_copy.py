@@ -1,0 +1,50 @@
+"""Pallas TPU block-copy kernel — the tier-migration copy engine.
+
+Moves KV blocks between pool buffers given (src_slot, dst_slot) pairs: the
+data path of a Radiant migration (the control path — table updates and the
+Algorithm-1 trigger — stays in ``memsys.tiered_kv``).  The slot indices are
+scalar-prefetched into SMEM and consumed by the BlockSpec index maps, so
+the DMA engine performs gather-from/scatter-to HBM directly; the
+destination pool is passed as an aliased input (in-place update).
+
+Layouts: pools [P, bs, KH, Dh]; ids i32[M, 2] (src, dst).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(ids_ref, src_ref, dst_ref, out_ref):
+    del ids_ref, dst_ref
+    out_ref[...] = src_ref[...]
+
+
+def block_copy_kernel(src_pool, dst_pool, ids, *, interpret: bool = False):
+    """Copy blocks src_pool[ids[m,0]] -> dst_pool[ids[m,1]] in place."""
+    P, bs, KH, Dh = dst_pool.shape
+    M = ids.shape[0]
+
+    def src_map(m, ids):
+        return (ids[m, 0], 0, 0, 0)
+
+    def dst_map(m, ids):
+        return (ids[m, 1], 0, 0, 0)
+
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(M,),
+            in_specs=[
+                pl.BlockSpec((1, bs, KH, Dh), src_map),
+                pl.BlockSpec((1, bs, KH, Dh), dst_map),
+            ],
+            out_specs=pl.BlockSpec((1, bs, KH, Dh), dst_map),
+        ),
+        out_shape=jax.ShapeDtypeStruct(dst_pool.shape, dst_pool.dtype),
+        input_output_aliases={2: 0},    # dst_pool (operand 2 incl. prefetch) aliases out
+        interpret=interpret,
+    )(ids, src_pool, dst_pool)

@@ -1,0 +1,53 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+``use_pallas`` defaults to interpret-mode-off + real kernels on TPU
+backends, and falls back to the jnp reference implementations elsewhere
+(the CPU dry-run container validates kernels in interpret mode via tests;
+the XLA model paths never require Pallas).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .block_copy import block_copy_kernel
+from .paged_attention import paged_attention_kernel
+from .pt_walk import pt_walk_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def paged_attention(q, k_pool, v_pool, tables, lengths, impl: str = "auto"):
+    """q [B,H,Dh] (H = KH*G), pools [KH,P,bs,Dh] -> [B,H,Dh]."""
+    B, H, Dh = q.shape
+    KH = k_pool.shape[0]
+    G = H // KH
+    qk = q.reshape(B, KH, G, Dh)
+    if impl == "pallas" or (impl == "auto" and _on_tpu()):
+        out = paged_attention_kernel(qk, k_pool, v_pool, tables, lengths,
+                                     interpret=not _on_tpu())
+    else:
+        out = ref.paged_attention_ref(qk, k_pool, v_pool, tables, lengths)
+    return out.reshape(B, H, Dh)
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def pt_walk(upper_row, leaf_tier, leaf_entries, vb, impl: str = "auto"):
+    if impl == "pallas" or (impl == "auto" and _on_tpu()):
+        return pt_walk_kernel(upper_row, leaf_tier, leaf_entries, vb,
+                              interpret=not _on_tpu())
+    return ref.pt_walk_ref(upper_row, leaf_tier, leaf_entries, vb)
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def block_copy(src_pool, dst_pool, ids, impl: str = "auto"):
+    if impl == "pallas" or (impl == "auto" and _on_tpu()):
+        return block_copy_kernel(src_pool, dst_pool, ids,
+                                 interpret=not _on_tpu())
+    return ref.block_copy_ref(src_pool, dst_pool, ids)

@@ -1,0 +1,71 @@
+"""Pallas TPU radix block-table walk kernel — the paper's object of study
+as a compute kernel.
+
+Translates virtual block ids to (tier, slot) physical coordinates through
+a two-level radix table.  The tiling *is* the Radiant placement decision:
+
+  * the upper level (``upper``) and the leaf-page tier vector are tiny and
+    ride whole in VMEM — BHi: the high levels of the table are pinned in
+    the fastest tier and every walk's first accesses are guaranteed fast;
+  * leaf entry pages stream through VMEM in grid-sized tiles (they are the
+    bulk of the table, like the paper's L4/PTE pages — 1/FANOUT of data).
+
+Queries are [N] virtual block ids for one sequence (the decode hot path);
+the batched wrapper vmaps.  Output is (tier[N], slot[N]).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+I32 = jnp.int32
+
+
+def _kernel(upper_ref, leaf_tier_ref, leaf_entries_ref, vb_ref,
+            tier_ref, slot_ref, *, fanout: int):
+    vb = vb_ref[...]                                  # [QB] virtual blocks
+    leaf_idx = vb // fanout                           # position in upper
+    entry = vb % fanout
+    # level-1 access: upper table (VMEM-pinned — BHi)
+    leaf_id = upper_ref[0, leaf_idx]                  # gather from VMEM
+    valid = leaf_id >= 0
+    safe = jnp.where(valid, leaf_id, 0)
+    # level-2 access: leaf entry page (streamed) + the leaf page's own tier
+    slot = leaf_entries_ref[safe, entry]
+    tier = leaf_tier_ref[0, safe]
+    tier_ref[...] = jnp.where(valid, tier, -1)
+    slot_ref[...] = jnp.where(valid, slot, -1)
+
+
+def pt_walk_kernel(upper_row, leaf_tier, leaf_entries, vb, *,
+                   q_block: int = 256, interpret: bool = False):
+    """upper_row i32[max_leaf], leaf_tier i32[n_leaf],
+    leaf_entries i32[n_leaf, FANOUT], vb i32[N] -> (tier[N], slot[N])."""
+    n = vb.shape[0]
+    n_leaf, fanout = leaf_entries.shape
+    q_block = min(q_block, n)
+    assert n % q_block == 0
+    grid = (n // q_block,)
+
+    kernel = functools.partial(_kernel, fanout=fanout)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, upper_row.shape[0]), lambda i: (0, 0)),
+            pl.BlockSpec((1, n_leaf), lambda i: (0, 0)),
+            pl.BlockSpec((n_leaf, fanout), lambda i: (0, 0)),
+            pl.BlockSpec((q_block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((q_block,), lambda i: (i,)),
+            pl.BlockSpec((q_block,), lambda i: (i,)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((n,), I32),
+                   jax.ShapeDtypeStruct((n,), I32)],
+        interpret=interpret,
+    )(upper_row[None, :], leaf_tier[None, :], leaf_entries, vb)

@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def paged_attention_ref(q, k_pool, v_pool, tables, lengths):
+    """q [B,KH,G,Dh]; pools [KH,P,bs,Dh]; tables [B,NB]; lengths [B]."""
+    B, KH, G, Dh = q.shape
+    _, P, bs, _ = k_pool.shape
+    NB = tables.shape[1]
+    safe = jnp.maximum(tables, 0)
+    # gather blocks: [B, KH, NB, bs, Dh] -> [B, KH, S, Dh]
+    k = jnp.moveaxis(k_pool[:, safe], 0, 2)      # [B, NB, KH, bs, Dh]...
+    k = k_pool[:, safe]                          # [KH, B, NB, bs, Dh]
+    v = v_pool[:, safe]
+    k = jnp.moveaxis(k, 0, 1).reshape(B, KH, NB * bs, Dh)
+    v = jnp.moveaxis(v, 0, 1).reshape(B, KH, NB * bs, Dh)
+    s = jnp.einsum("bkgd,bksd->bkgs", q.astype(F32), k.astype(F32))
+    s = s / jnp.sqrt(jnp.asarray(Dh, F32))
+    pos = jnp.arange(NB * bs)
+    mask = pos[None, :] < lengths[:, None]
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bksd->bkgd", p, v.astype(F32))
+    return out.astype(q.dtype)
+
+
+def pt_walk_ref(upper_row, leaf_tier, leaf_entries, vb):
+    fanout = leaf_entries.shape[1]
+    leaf_id = upper_row[vb // fanout]
+    valid = leaf_id >= 0
+    safe = jnp.where(valid, leaf_id, 0)
+    slot = leaf_entries[safe, vb % fanout]
+    tier = leaf_tier[safe]
+    return (jnp.where(valid, tier, -1).astype(jnp.int32),
+            jnp.where(valid, slot, -1).astype(jnp.int32))
+
+
+def block_copy_ref(src_pool, dst_pool, ids):
+    return dst_pool.at[ids[:, 1]].set(src_pool[ids[:, 0]])

@@ -1,0 +1,72 @@
+"""HLO collective parsing + analytic step-FLOPs (dry-run helpers).
+
+Importable without touching jax device state (unlike dryrun.py, which must
+set XLA_FLAGS at import).
+"""
+from __future__ import annotations
+
+import re
+
+COLLECTIVE_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", )
+SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s32|u32|s8|u8|pred|s64|u64)"
+                      r"\[([0-9,]*)\]")
+GROUP_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+               "bf16": 2, "f16": 2, "s8": 1, "u8": 1, "pred": 1}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo: str):
+    """Per-device collective traffic estimate from the SPMD HLO.
+
+    Ring-model bytes-on-wire per device: all-gather / reduce-scatter /
+    all-to-all move (g-1)/g of the full buffer; all-reduce moves 2x that;
+    collective-permute moves the buffer once.
+    """
+    out = {}
+    for m in COLLECTIVE_RE.finditer(hlo):
+        shape_txt, op = m.group(1), m.group(2)
+        nbytes = _shape_bytes(shape_txt)
+        line_end = hlo.find("\n", m.end())
+        line = hlo[m.start():line_end if line_end > 0 else len(hlo)]
+        gm = GROUP_RE.search(line)
+        g = len(gm.group(1).split(",")) if gm else 2
+        frac = (g - 1) / g
+        if op == "all-reduce":
+            traffic = 2 * nbytes * frac
+        elif op == "collective-permute":
+            traffic = nbytes
+        else:
+            traffic = nbytes * frac
+        d = out.setdefault(op, {"count": 0, "bytes": 0.0, "traffic": 0.0})
+        d["count"] += 1
+        d["bytes"] += nbytes
+        d["traffic"] += traffic
+    return out
+
+
+def model_flops(cfg, shape) -> float:
+    """Classic 2ND (fwd) / 6ND (train) matmul-FLOPs-per-step estimate."""
+    n = cfg.n_active_params()
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.seq_len * shape.global_batch
+    return 2.0 * n * shape.global_batch          # decode: one token per seq
+
+

@@ -1,0 +1,299 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and record memory / cost / collective statistics.
+
+The two lines above MUST run before any jax import (device count locks at
+first init).  Usage:
+
+    PYTHONPATH=src python -m repro.launch.dryrun                 # everything
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-14b \
+        --shape train_4k --mesh single                           # one cell
+
+Artifacts land in artifacts/dryrun/<mesh>/<arch>__<shape>.json and are
+skipped if present (delete to re-run); benchmarks/roofline.py consumes
+them.
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.configs.base import SHAPES, cell_is_valid
+from repro.distributed import sharding as shard_mod
+from repro.models import model as model_mod
+from repro.models.modules import count_params
+from repro.training import optimizer as opt_mod
+from repro.training.train import TrainConfig, batch_constraint, make_train_step
+from repro.launch.mesh import make_production_mesh
+
+ART_DIR = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+# Per-cell resource strategy: (microbatches, seq_shard, factored_opt).
+# Chosen by napkin math over v5e HBM (16 GB/chip) — see EXPERIMENTS.md
+# §Dry-run for the per-cell memory_analysis that validates these.
+TRAIN_OVERRIDES = {
+    "nemotron-4-340b": dict(microbatches=16, seq_shard=True, factored=True,
+                            accum_dtype="bfloat16"),
+    "deepseek-coder-33b": dict(microbatches=8, seq_shard=True,
+                               factored=True),
+    "qwen2.5-14b": dict(microbatches=8, seq_shard=True),
+    "qwen1.5-0.5b": dict(microbatches=1),
+    "llama4-maverick-400b-a17b": dict(microbatches=16, seq_shard=True,
+                                      factored=True,
+                                      accum_dtype="bfloat16"),
+    "llama4-scout-17b-16e": dict(microbatches=16, seq_shard=True,
+                                 factored=True),
+    "qwen2-vl-2b": dict(microbatches=4),
+    "hubert-xlarge": dict(microbatches=4),
+    "jamba-v0.1-52b": dict(microbatches=16, seq_shard=True, factored=True),
+    "rwkv6-3b": dict(microbatches=4),
+}
+
+from repro.launch.analysis import (model_flops,
+                                   parse_collectives)
+
+
+def _dp_axes(mesh):
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return dp[0] if len(dp) == 1 else dp
+
+
+def auto_out_shardings(mesh, out_shapes, batch_div):
+    """Output shardings by leaf rank: rank-5 [G,B,S,KH,Dh] KV collections
+    shard batch over DP and head_dim over model; rank-2 [B,V] logits shard
+    batch; everything else replicates."""
+    dp = _dp_axes(mesh)
+    dp_size = shard_mod.mesh_axis_size(mesh, dp)
+    tp = shard_mod.mesh_axis_size(mesh, "model") if "model" in mesh.shape \
+        else 1
+
+    def one(s):
+        if not hasattr(s, "shape"):
+            return NamedSharding(mesh, P())
+        if len(s.shape) == 5 and s.shape[1] % dp_size == 0:
+            last = "model" if s.shape[-1] % tp == 0 else None
+            return NamedSharding(mesh, P(None, dp, None, None, last))
+        if len(s.shape) >= 1 and s.shape and s.shape[0] % dp_size == 0 \
+                and len(s.shape) <= 2 and s.shape[0] == batch_div:
+            return NamedSharding(mesh, P(dp))
+        return NamedSharding(mesh, P())
+    return jax.tree.map(one, out_shapes)
+
+
+def build_cell(cfg, shape, mesh, variant=None):
+    """Returns (fn, example_args) ready for jit lower."""
+    specs = model_mod.param_specs(cfg)
+    pbytes = sum(int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize
+                 for s in jax.tree.leaves(
+                     specs, is_leaf=lambda x: isinstance(x, shard_mod.ParamSpec)))
+    rules = shard_mod.choose_rules(
+        pbytes, mesh, mode="train" if shape.kind == "train" else "serve")
+    overrides = PERF_VARIANTS.get(variant, {}).get((cfg.name, shape.name), {})
+    if "rules" in overrides:
+        rules = shard_mod.RULE_SETS[overrides["rules"]]
+    p_sh = shard_mod.param_shardings(specs, mesh, rules)
+    abs_params = model_mod.make_abstract_params(cfg)
+    abs_params = jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        abs_params, p_sh)
+
+    batch_specs = model_mod.input_specs(cfg, shape.seq_len,
+                                        shape.global_batch, shape.kind)
+    b_sh = shard_mod.batch_specs(batch_specs, mesh)
+    abs_batch = jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        batch_specs, b_sh)
+
+    if shape.kind == "train":
+        ov = dict(TRAIN_OVERRIDES.get(cfg.name, {}))
+        ov.update({k: v for k, v in overrides.items() if k != "rules"})
+        factored = ov.pop("factored", False)
+        tc = TrainConfig(opt=opt_mod.OptConfig(factored=factored), **ov)
+        step = make_train_step(cfg, tc, mesh)
+        o_sh = shard_mod.opt_state_shardings(specs, mesh, rules, factored)
+        abs_opt = opt_mod.abstract_opt_state(abs_params, factored)
+        abs_opt = jax.tree.map(
+            lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+            abs_opt, o_sh)
+        metric_sh = {"loss": NamedSharding(mesh, P()),
+                     "grad_norm": NamedSharding(mesh, P()),
+                     "lr": NamedSharding(mesh, P())}
+        fn = jax.jit(step, donate_argnums=(0, 1),
+                     out_shardings=(p_sh, o_sh, metric_sh))
+        return fn, (abs_params, abs_opt, abs_batch), dict(strategy=ov,
+                                                          factored=factored,
+                                                          rules_fsdp=rules is shard_mod.FSDP_RULES)
+
+    if shape.kind == "prefill":
+        act = batch_constraint(mesh)
+
+        def fn(params, batch):
+            return model_mod.prefill(cfg, params, batch, act_constraint=act)
+        out_shapes = jax.eval_shape(fn, abs_params, abs_batch)
+        out_sh = auto_out_shardings(mesh, out_shapes, shape.global_batch)
+        return jax.jit(fn, out_shardings=out_sh), (abs_params, abs_batch), \
+            dict(rules_fsdp=rules is shard_mod.FSDP_RULES)
+
+    # decode
+    state = model_mod.init_decode_state(
+        cfg, shape.global_batch, shape.seq_len, abstract=True,
+        kv_dtype=overrides.get("kv_dtype"))
+    s_sh = shard_mod.kv_cache_sharding(mesh, state)
+    abs_state = jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        state, s_sh)
+
+    def fn(params, state, tokens):
+        pos = jnp.asarray(shape.seq_len - 1, jnp.int32)
+        return model_mod.decode_step(cfg, params, state, tokens, pos)
+
+    logits_sh = NamedSharding(
+        mesh, P(_dp_axes(mesh))
+        if shape.global_batch % shard_mod.mesh_axis_size(
+            mesh, _dp_axes(mesh)) == 0 else P())
+    return jax.jit(fn, donate_argnums=(1,),
+                   out_shardings=(s_sh, logits_sh)), \
+        (abs_params, abs_state, abs_batch["tokens"]), dict(
+            rules_fsdp=rules is shard_mod.FSDP_RULES)
+
+
+# Hillclimb variants (EXPERIMENTS.md §Perf): per-cell strategy changes,
+# lowered side-by-side with the baseline into artifacts/dryrun/<mesh>-<v>/.
+PERF_VARIANTS = {
+    "moe_ep": {
+        ("llama4-maverick-400b-a17b", "train_4k"): dict(rules="moe_ep"),
+        ("llama4-scout-17b-16e", "train_4k"): dict(rules="moe_ep"),
+        ("jamba-v0.1-52b", "train_4k"): dict(rules="moe_ep"),
+    },
+    "moe_ep_mb4": {
+        ("llama4-maverick-400b-a17b", "train_4k"): dict(rules="moe_ep",
+                                                        microbatches=4),
+        ("jamba-v0.1-52b", "train_4k"): dict(rules="moe_ep",
+                                             microbatches=4),
+    },
+    "moe_ep_tp": {
+        ("llama4-maverick-400b-a17b", "train_4k"): dict(rules="moe_ep_tp"),
+        ("jamba-v0.1-52b", "train_4k"): dict(rules="moe_ep_tp"),
+    },
+    "kv_f8": {
+        ("deepseek-coder-33b", "decode_32k"): dict(kv_dtype="float8_e4m3fn"),
+        ("qwen2.5-14b", "decode_32k"): dict(kv_dtype="float8_e4m3fn"),
+    },
+}
+
+
+def run_cell(arch_id: str, shape_id: str, mesh_name: str,
+             force: bool = False, variant=None) -> dict:
+    dir_name = mesh_name if not variant else f"{mesh_name}-{variant}"
+    out_dir = ART_DIR / dir_name
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_path = out_dir / f"{arch_id}__{shape_id}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    cfg = configs.get_config(arch_id)
+    shape = SHAPES[shape_id]
+    rec = {"arch": arch_id, "shape": shape_id, "mesh": mesh_name,
+           "n_params": cfg.n_params(), "n_active": cfg.n_active_params(),
+           "model_flops": model_flops(cfg, shape)}
+    ok, reason = cell_is_valid(cfg, shape)
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        out_path.write_text(json.dumps(rec, indent=1))
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multipod"))
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    rec["n_chips"] = n_chips
+    rec["variant"] = variant
+    try:
+        with mesh:
+            fn, args, meta = build_cell(cfg, shape, mesh, variant)
+            rec.update(meta)
+            t0 = time.time()
+            lowered = fn.lower(*args)
+            rec["lower_s"] = round(time.time() - t0, 1)
+            t0 = time.time()
+            compiled = lowered.compile()
+            rec["compile_s"] = round(time.time() - t0, 1)
+            ma = compiled.memory_analysis()
+            rec["memory"] = {
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "alias_bytes": ma.alias_size_in_bytes,
+                "peak_est_bytes": ma.argument_size_in_bytes
+                + ma.output_size_in_bytes + ma.temp_size_in_bytes
+                - ma.alias_size_in_bytes,
+            }
+            ca = compiled.cost_analysis() or {}
+            rec["cost"] = {"flops": float(ca.get("flops", -1)),
+                           "bytes_accessed": float(ca.get("bytes accessed",
+                                                          -1))}
+            hlo = compiled.as_text()
+            rec["collectives"] = parse_collectives(hlo)
+            rec["hlo_bytes"] = len(hlo)
+            rec["status"] = "ok"
+    except Exception as e:  # noqa: BLE001 — record the failure verbatim
+        rec["status"] = "failed"
+        rec["error"] = f"{type(e).__name__}: {e}"[:2000]
+        rec["traceback"] = traceback.format_exc()[-3000:]
+    out_path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multipod", "both"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--variant", default=None,
+                    help="PERF_VARIANTS key: lower only its cells")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(configs.ARCH_IDS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    if args.variant:
+        cells = list(PERF_VARIANTS[args.variant])
+        archs = sorted({a for a, _ in cells if args.arch in (None, a)})
+        shapes = sorted({s for _, s in cells})
+    meshes = {"single": ["single"], "multipod": ["multipod"],
+              "both": ["single", "multipod"]}[args.mesh]
+
+    for mesh_name in meshes:
+        for arch_id in archs:
+            for shape_id in shapes:
+                t0 = time.time()
+                rec = run_cell(arch_id, shape_id, mesh_name,
+                               force=args.force, variant=args.variant)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    peak = rec["memory"]["peak_est_bytes"] / (1 << 30)
+                    extra = (f"peak={peak:.1f}GiB "
+                             f"flops/dev={rec['cost']['flops']:.3g} "
+                             f"compile={rec.get('compile_s', 0)}s")
+                elif status == "skipped":
+                    extra = rec["reason"]
+                else:
+                    extra = rec["error"][:160]
+                print(f"[{mesh_name}] {arch_id} x {shape_id}: {status} "
+                      f"{extra} ({time.time() - t0:.0f}s)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

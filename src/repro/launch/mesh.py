@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+A pod is 256 chips as (data=16, model=16); the multi-pod mesh prepends a
+"pod" axis (2 pods = 512 chips).  Defined as functions so importing this
+module never touches jax device state (device count is locked at first
+init — dryrun.py must set XLA_FLAGS before any jax import).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 2, model: int = 4) -> jax.sharding.Mesh:
+    """Small mesh over host CPU devices for tests/examples."""
+    n = len(jax.devices())
+    data = min(data, max(n // model, 1))
+    if data * model > n:
+        model = n // data
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

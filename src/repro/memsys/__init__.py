@@ -1,0 +1,5 @@
+"""Tiered paged-KV runtime: the paper's technique, TPU-native (Pillar B)."""
+from .tiered_kv import (COLD, FANOUT, HOT, TieredKV, append_token,
+                        block_size_of, gather_kv, init, lookup_blocks,
+                        migrate_sequence, release_sequence,
+                        table_invariant_violations)

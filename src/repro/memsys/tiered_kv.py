@@ -1,0 +1,379 @@
+"""Tiered paged KV cache with a hierarchical, Radiant-managed block table.
+
+The TPU translation of the paper (DESIGN.md section 2, Pillar B):
+
+  * two block pools per attention group — HOT (device HBM) and COLD (host
+    memory on TPU; a second buffer here),
+  * a two-level block table: the *upper* level (sequence -> leaf-page id)
+    is small and always lives in fast memory (BHi: <0.2% of table bytes,
+    touched on every lookup), while *leaf pages* of ``FANOUT`` (tier, slot)
+    entries migrate between tiers with their data blocks,
+  * Radiant invariant (Algorithm 1): a leaf page is HOT iff at least one
+    KV block it maps is hot; demoting the last hot block under a leaf
+    triggers the leaf's demotion, promoting any block triggers the leaf's
+    promotion.  ``leaf_hot_children`` mirrors the kernel implementation's
+    per-PTE-page DRAM-children counter.
+
+Everything is functional JAX over a :class:`TieredKV` pytree, so the ops
+jit/shard cleanly; the serving engine (repro.serving.engine) sequences
+them.  ``gather_kv`` is the XLA reference data path; the Pallas
+``paged_attention`` kernel consumes the same table layout with the upper
+level scalar-prefetched into SMEM.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+I32 = jnp.int32
+HOT, COLD = 0, 1
+FANOUT = 64          # block-table entries per leaf page
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TieredKV:
+    # pools: [G, n_blocks, block_size, KH, Dh]
+    hot_k: jax.Array
+    hot_v: jax.Array
+    cold_k: jax.Array
+    cold_v: jax.Array
+    # hierarchical block table
+    upper: jax.Array              # i32[n_seqs, max_leaf]  -> leaf page id
+    leaf_tier_slot: jax.Array     # i32[n_leaf, FANOUT, 2] (tier, slot)
+    leaf_tier: jax.Array          # i32[n_leaf]  tier of the leaf page itself
+    leaf_hot_children: jax.Array  # i32[n_leaf]
+    # allocators (stack free-lists)
+    hot_free: jax.Array           # i32[n_hot] slot ids
+    hot_free_top: jax.Array       # i32[] items remaining
+    cold_free: jax.Array
+    cold_free_top: jax.Array
+    leaf_free: jax.Array          # i32[n_leaf]
+    leaf_free_top: jax.Array
+    # sequences
+    seq_len: jax.Array            # i32[n_seqs] tokens written
+    # stats (Radiant bookkeeping, Table-5 analogues)
+    stats: jax.Array              # i32[6]: blk_promote, blk_demote,
+    #                                leaf_promote, leaf_demote,
+    #                                leaf_already, hot_alloc_fallback
+
+
+STAT_BLK_PROMOTE, STAT_BLK_DEMOTE, STAT_LEAF_PROMOTE, STAT_LEAF_DEMOTE, \
+    STAT_LEAF_ALREADY, STAT_FALLBACK = range(6)
+
+
+def init(n_groups: int, n_hot: int, n_cold: int, block_size: int,
+         kv_heads: int, head_dim: int, n_seqs: int, max_seq: int,
+         dtype=jnp.bfloat16) -> TieredKV:
+    max_blocks = -(-max_seq // block_size)
+    max_leaf = -(-max_blocks // FANOUT)
+    n_leaf = n_seqs * max_leaf            # worst case: no sharing
+    pool = lambda n: jnp.zeros((n_groups, n, block_size, kv_heads, head_dim),
+                               dtype)
+    return TieredKV(
+        hot_k=pool(n_hot), hot_v=pool(n_hot),
+        cold_k=pool(n_cold), cold_v=pool(n_cold),
+        upper=jnp.full((n_seqs, max_leaf), -1, I32),
+        leaf_tier_slot=jnp.full((n_leaf, FANOUT, 2), -1, I32),
+        leaf_tier=jnp.full((n_leaf,), -1, I32),
+        leaf_hot_children=jnp.zeros((n_leaf,), I32),
+        hot_free=jnp.arange(n_hot - 1, -1, -1, dtype=I32),
+        hot_free_top=jnp.asarray(n_hot, I32),
+        cold_free=jnp.arange(n_cold - 1, -1, -1, dtype=I32),
+        cold_free_top=jnp.asarray(n_cold, I32),
+        leaf_free=jnp.arange(n_leaf - 1, -1, -1, dtype=I32),
+        leaf_free_top=jnp.asarray(n_leaf, I32),
+        seq_len=jnp.zeros((n_seqs,), I32),
+        stats=jnp.zeros((6,), I32),
+    )
+
+
+def block_size_of(kv: TieredKV) -> int:
+    return kv.hot_k.shape[2]
+
+
+# ---------------------------------------------------------------------------
+# allocation
+# ---------------------------------------------------------------------------
+def _pop(free, top):
+    top = top - 1
+    return free[top], top
+
+
+def _push(free, top, slot):
+    free = free.at[top].set(slot)
+    return free, top + 1
+
+
+def append_token(kv: TieredKV, seq: jax.Array, k: jax.Array, v: jax.Array
+                 ) -> TieredKV:
+    """Write one token's KV ([G, KH, Dh]) for sequence ``seq``.
+
+    Allocates a hot block (cold fallback when the hot pool is exhausted —
+    the paper's "allow spill, then migrate" §3.5 lesson) and a leaf table
+    page on block/leaf boundaries.
+    """
+    bs = block_size_of(kv)
+    pos = kv.seq_len[seq]
+    blk = pos // bs
+    off = pos % bs
+    leaf_idx = blk // FANOUT
+    entry = blk % FANOUT
+
+    # --- leaf page allocation on first touch (upper level stays pinned) ----
+    leaf_id = kv.upper[seq, leaf_idx]
+    need_leaf = leaf_id < 0
+    new_leaf, leaf_top = _pop(kv.leaf_free, kv.leaf_free_top)
+    leaf_id = jnp.where(need_leaf, new_leaf, leaf_id)
+    upper = kv.upper.at[seq, leaf_idx].set(leaf_id)
+    leaf_free_top = jnp.where(need_leaf, leaf_top, kv.leaf_free_top)
+
+    # --- block allocation on block boundary --------------------------------
+    # (if both pools are exhausted the token is dropped and counted — the
+    # engine sizes pools so this is an overload signal, not a data path)
+    hot_ok = kv.hot_free_top > 0
+    cold_ok = kv.cold_free_top > 0
+    need_blk = (off == 0) & (hot_ok | cold_ok)
+    hot_slot, hot_top = _pop(kv.hot_free, kv.hot_free_top)
+    cold_slot, cold_top = _pop(kv.cold_free, kv.cold_free_top)
+    tier = jnp.where(hot_ok, HOT, COLD)
+    slot = jnp.where(hot_ok, hot_slot, cold_slot)
+    hot_free_top = jnp.where(need_blk & hot_ok, hot_top, kv.hot_free_top)
+    cold_free_top = jnp.where(need_blk & ~hot_ok, cold_top,
+                              kv.cold_free_top)
+    old = kv.leaf_tier_slot[leaf_id, entry]
+    tier = jnp.where(need_blk, tier, old[0])
+    slot = jnp.where(need_blk, slot, old[1])
+    lts = kv.leaf_tier_slot.at[leaf_id, entry].set(
+        jnp.stack([tier, slot]))
+    # a fresh leaf table page follows its first data block's tier (the
+    # Linux default the paper studies: PT pages follow the data policy)
+    leaf_tier = kv.leaf_tier.at[leaf_id].set(
+        jnp.where(need_leaf, tier, kv.leaf_tier[leaf_id]))
+    lhc = kv.leaf_hot_children.at[leaf_id].add(
+        jnp.where(need_blk & (tier == HOT), 1, 0))
+    stats = kv.stats.at[STAT_FALLBACK].add(
+        jnp.where(need_blk & ~hot_ok, 1, 0))
+
+    # --- write the token (masked into whichever pool owns the block) -------
+    is_hot = tier == HOT
+    hot_idx = jnp.where(is_hot, slot, 0)
+    cold_idx = jnp.where(is_hot, 0, slot)
+    hot_k = kv.hot_k.at[:, hot_idx, off].set(
+        jnp.where(is_hot, k, kv.hot_k[:, hot_idx, off]))
+    hot_v = kv.hot_v.at[:, hot_idx, off].set(
+        jnp.where(is_hot, v, kv.hot_v[:, hot_idx, off]))
+    cold_k = kv.cold_k.at[:, cold_idx, off].set(
+        jnp.where(is_hot, kv.cold_k[:, cold_idx, off], k))
+    cold_v = kv.cold_v.at[:, cold_idx, off].set(
+        jnp.where(is_hot, kv.cold_v[:, cold_idx, off], v))
+
+    kv = dataclasses.replace(
+        kv, hot_k=hot_k, hot_v=hot_v, cold_k=cold_k, cold_v=cold_v,
+        upper=upper, leaf_tier_slot=lts, leaf_tier=leaf_tier,
+        leaf_hot_children=lhc, hot_free_top=hot_free_top,
+        cold_free_top=cold_free_top, leaf_free_top=leaf_free_top,
+        seq_len=kv.seq_len.at[seq].add(1), stats=stats)
+    # Beyond-paper refinement: the paper triggers table migration only on
+    # data *migrations*; we also trigger on allocation, so a hot block
+    # allocated under a cold leaf page (post-demotion growth) promotes the
+    # leaf immediately — found by the hypothesis invariant test.
+    return _leaf_trigger(kv, leaf_id, need_blk)
+
+
+# ---------------------------------------------------------------------------
+# lookup / gather (the "page walk")
+# ---------------------------------------------------------------------------
+def lookup_blocks(kv: TieredKV, seq: jax.Array, n_blocks: int
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Walk the table: virtual blocks 0..n_blocks-1 of ``seq`` ->
+    (tier[n_blocks], slot[n_blocks]).  Two dependent gathers — upper level
+    then leaf entries — exactly a radix page walk."""
+    vb = jnp.arange(n_blocks)
+    leaf_ids = kv.upper[seq, vb // FANOUT]                 # walk level 1
+    ts = kv.leaf_tier_slot[jnp.maximum(leaf_ids, 0), vb % FANOUT]
+    valid = leaf_ids >= 0
+    return jnp.where(valid, ts[:, 0], -1), jnp.where(valid, ts[:, 1], -1)
+
+
+def gather_kv(kv: TieredKV, seq: jax.Array, n_blocks: int
+              ) -> Tuple[jax.Array, jax.Array]:
+    """Materialize [G, n_blocks*bs, KH, Dh] for attention (XLA reference
+    path; the Pallas kernel streams blocks instead of copying them)."""
+    tier, slot = lookup_blocks(kv, seq, n_blocks)
+    safe = jnp.maximum(slot, 0)
+    hk = kv.hot_k[:, safe]
+    hv = kv.hot_v[:, safe]
+    ck = kv.cold_k[:, jnp.minimum(safe, kv.cold_k.shape[1] - 1)]
+    cv = kv.cold_v[:, jnp.minimum(safe, kv.cold_v.shape[1] - 1)]
+    is_hot = (tier == HOT)[None, :, None, None, None]
+    k = jnp.where(is_hot, hk, ck)
+    v = jnp.where(is_hot, hv, cv)
+    G, nb, bs, KH, Dh = k.shape
+    return (k.reshape(G, nb * bs, KH, Dh), v.reshape(G, nb * bs, KH, Dh))
+
+
+# ---------------------------------------------------------------------------
+# Radiant migration (data-migration-triggered table migration)
+# ---------------------------------------------------------------------------
+def migrate_sequence(kv: TieredKV, seq: jax.Array, to_tier: int,
+                     max_blocks: int, trigger_leaf: bool = True) -> TieredKV:
+    """Move every block of ``seq`` to ``to_tier`` (scheduler swap-in/out),
+    then apply the Radiant trigger to each covered leaf page.
+
+    The per-block loop is a ``fori_loop`` (bounded by max_blocks); block
+    copies route through the pools (the Pallas ``block_copy`` kernel is the
+    TPU data path for the same op).
+    """
+    bs = block_size_of(kv)
+
+    def body(vb, kv: TieredKV) -> TieredKV:
+        n_used = (kv.seq_len[seq] + bs - 1) // bs
+        leaf_idx, entry = vb // FANOUT, vb % FANOUT
+        leaf_id = kv.upper[seq, leaf_idx]
+        valid = (vb < n_used) & (leaf_id >= 0)
+        leaf_id = jnp.maximum(leaf_id, 0)
+        tier = kv.leaf_tier_slot[leaf_id, entry, 0]
+        slot = kv.leaf_tier_slot[leaf_id, entry, 1]
+        move = valid & (tier >= 0) & (tier != to_tier)
+
+        if to_tier == HOT:
+            can = kv.hot_free_top > 0
+            move = move & can
+            new_slot, new_top = _pop(kv.hot_free, kv.hot_free_top)
+            hot_free_top = jnp.where(move, new_top, kv.hot_free_top)
+            # copy cold[slot] -> hot[new_slot]
+            src_k = kv.cold_k[:, jnp.maximum(slot, 0)]
+            src_v = kv.cold_v[:, jnp.maximum(slot, 0)]
+            idx = jnp.where(move, new_slot, 0)
+            hot_k = kv.hot_k.at[:, idx].set(
+                jnp.where(move, src_k, kv.hot_k[:, idx]))
+            hot_v = kv.hot_v.at[:, idx].set(
+                jnp.where(move, src_v, kv.hot_v[:, idx]))
+            cold_free, cold_top2 = _push(kv.cold_free, kv.cold_free_top,
+                                         jnp.maximum(slot, 0))
+            kv = dataclasses.replace(
+                kv, hot_k=hot_k, hot_v=hot_v,
+                hot_free_top=hot_free_top,
+                cold_free=jnp.where(move, cold_free, kv.cold_free),
+                cold_free_top=jnp.where(move, cold_top2, kv.cold_free_top))
+            new_tier = HOT
+        else:
+            can = kv.cold_free_top > 0
+            move = move & can
+            new_slot, new_top = _pop(kv.cold_free, kv.cold_free_top)
+            cold_free_top = jnp.where(move, new_top, kv.cold_free_top)
+            src_k = kv.hot_k[:, jnp.maximum(slot, 0)]
+            src_v = kv.hot_v[:, jnp.maximum(slot, 0)]
+            idx = jnp.where(move, new_slot, 0)
+            cold_k = kv.cold_k.at[:, idx].set(
+                jnp.where(move, src_k, kv.cold_k[:, idx]))
+            cold_v = kv.cold_v.at[:, idx].set(
+                jnp.where(move, src_v, kv.cold_v[:, idx]))
+            hot_free, hot_top2 = _push(kv.hot_free, kv.hot_free_top,
+                                       jnp.maximum(slot, 0))
+            kv = dataclasses.replace(
+                kv, cold_k=cold_k, cold_v=cold_v,
+                cold_free_top=cold_free_top,
+                hot_free=jnp.where(move, hot_free, kv.hot_free),
+                hot_free_top=jnp.where(move, hot_top2, kv.hot_free_top))
+            new_tier = COLD
+
+        lts = kv.leaf_tier_slot.at[leaf_id, entry].set(
+            jnp.where(move, jnp.stack([jnp.asarray(new_tier, I32),
+                                       new_slot]),
+                      kv.leaf_tier_slot[leaf_id, entry]))
+        delta = jnp.where(move, 1 if to_tier == HOT else -1, 0)
+        lhc = kv.leaf_hot_children.at[leaf_id].add(delta)
+        stats = kv.stats.at[
+            STAT_BLK_PROMOTE if to_tier == HOT else STAT_BLK_DEMOTE].add(
+            jnp.where(move, 1, 0))
+        kv = dataclasses.replace(kv, leaf_tier_slot=lts,
+                                 leaf_hot_children=lhc, stats=stats)
+        if trigger_leaf:
+            # Radiant trigger: leaf follows its children (Algorithm 1)
+            kv = _leaf_trigger(kv, leaf_id, valid)
+        return kv
+
+    return jax.lax.fori_loop(0, max_blocks, body, kv)
+
+
+def release_sequence(kv: TieredKV, seq: jax.Array,
+                     max_blocks: int) -> TieredKV:
+    """Free every block and leaf table page of a finished sequence."""
+    bs = block_size_of(kv)
+
+    def body(vb, kv: TieredKV) -> TieredKV:
+        n_used = (kv.seq_len[seq] + bs - 1) // bs
+        leaf_idx, entry = vb // FANOUT, vb % FANOUT
+        leaf_id = kv.upper[seq, leaf_idx]
+        valid = (vb < n_used) & (leaf_id >= 0)
+        leaf_id = jnp.maximum(leaf_id, 0)
+        tier = kv.leaf_tier_slot[leaf_id, entry, 0]
+        slot = jnp.maximum(kv.leaf_tier_slot[leaf_id, entry, 1], 0)
+        free_hot = valid & (tier == HOT)
+        free_cold = valid & (tier == COLD)
+        hot_free, hot_top = _push(kv.hot_free, kv.hot_free_top, slot)
+        cold_free, cold_top = _push(kv.cold_free, kv.cold_free_top, slot)
+        lts = kv.leaf_tier_slot.at[leaf_id, entry].set(
+            jnp.where(valid, jnp.full((2,), -1, I32),
+                      kv.leaf_tier_slot[leaf_id, entry]))
+        lhc = kv.leaf_hot_children.at[leaf_id].add(
+            jnp.where(free_hot, -1, 0))
+        # free the leaf page itself once its last entry is cleared
+        last_entry = valid & ((entry == FANOUT - 1)
+                              | (vb == n_used - 1))
+        leaf_free, leaf_top = _push(kv.leaf_free, kv.leaf_free_top, leaf_id)
+        return dataclasses.replace(
+            kv,
+            hot_free=jnp.where(free_hot, hot_free, kv.hot_free),
+            hot_free_top=jnp.where(free_hot, hot_top, kv.hot_free_top),
+            cold_free=jnp.where(free_cold, cold_free, kv.cold_free),
+            cold_free_top=jnp.where(free_cold, cold_top, kv.cold_free_top),
+            leaf_tier_slot=lts, leaf_hot_children=jnp.maximum(lhc, 0),
+            leaf_free=jnp.where(last_entry, leaf_free, kv.leaf_free),
+            leaf_free_top=jnp.where(last_entry, leaf_top,
+                                    kv.leaf_free_top),
+            leaf_tier=kv.leaf_tier.at[leaf_id].set(
+                jnp.where(last_entry, -1, kv.leaf_tier[leaf_id])),
+            upper=kv.upper.at[seq, leaf_idx].set(
+                jnp.where(last_entry, -1, kv.upper[seq, leaf_idx])))
+
+    kv = jax.lax.fori_loop(0, max_blocks, body, kv)
+    return dataclasses.replace(kv, seq_len=kv.seq_len.at[seq].set(0))
+
+
+def _leaf_trigger(kv: TieredKV, leaf_id: jax.Array,
+                  active: jax.Array) -> TieredKV:
+    """Algorithm-1 conditions for one leaf table page:
+
+      * promote leaf to HOT if any child block is hot and the leaf is COLD,
+      * demote leaf to COLD only when its last hot child left (line 18),
+      * count 'already in destination' skips (Table 5 analogue).
+    """
+    children_hot = kv.leaf_hot_children[leaf_id] > 0
+    cur = kv.leaf_tier[leaf_id]
+    want = jnp.where(children_hot, HOT, COLD)
+    do = active & (cur >= 0) & (cur != want)
+    already = active & (cur >= 0) & (cur == want)
+    leaf_tier = kv.leaf_tier.at[leaf_id].set(jnp.where(do, want, cur))
+    stats = kv.stats
+    stats = stats.at[STAT_LEAF_PROMOTE].add(
+        jnp.where(do & (want == HOT), 1, 0))
+    stats = stats.at[STAT_LEAF_DEMOTE].add(
+        jnp.where(do & (want == COLD), 1, 0))
+    stats = stats.at[STAT_LEAF_ALREADY].add(jnp.where(already, 1, 0))
+    return dataclasses.replace(kv, leaf_tier=leaf_tier, stats=stats)
+
+
+def table_invariant_violations(kv: TieredKV) -> jax.Array:
+    """Radiant invariant checker (property tests): #leaf pages whose tier
+    disagrees with their children (hot children => leaf must be HOT)."""
+    alive = kv.leaf_tier >= 0
+    should_hot = kv.leaf_hot_children > 0
+    bad = alive & ((should_hot & (kv.leaf_tier != HOT))
+                   | (~should_hot & (kv.leaf_tier != COLD)))
+    return jnp.sum(bad.astype(I32))

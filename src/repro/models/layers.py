@@ -1,0 +1,206 @@
+"""Transformer building blocks: norms, RoPE/M-RoPE, GQA attention, MLPs.
+
+Attention comes in three flavors:
+
+  * ``chunked_attention`` — flash-style two-level ``lax.scan`` over query and
+    key/value chunks with a running (max, denom, acc) online softmax.  Live
+    intermediates stay at [B, Cq, H, Ck] instead of [B, S, H, S], which is
+    what lets 32k-token prefill lower within per-chip HBM budgets.  Block-
+    causal masking computes masked blocks and discards them (~2x FLOPs on
+    the strictly-lower triangle at block granularity) — the waste is visible
+    in the roofline MODEL_FLOPS/HLO_FLOPS ratio and discussed in §Perf.
+  * ``decode_attention`` — one new token against a [B, S, KH, Dh] cache.
+  * paged variants live in ``repro.memsys`` / ``repro.kernels``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+def rms_norm(x, scale, eps=1e-5):
+    var = jnp.mean(jnp.square(x.astype(F32)), axis=-1, keepdims=True)
+    return (x.astype(F32) * jax.lax.rsqrt(var + eps)).astype(x.dtype) \
+        * scale.astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    xf = x.astype(F32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(F32) + bias.astype(F32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# rotary embeddings
+# --------------------------------------------------------------------------
+def _rope_freqs(head_dim: int, base: float = 10000.0):
+    half = head_dim // 2
+    return 1.0 / (base ** (jnp.arange(half, dtype=F32) / half))
+
+
+def apply_rope(x, positions, base: float = 10000.0):
+    """x: [..., S, H, Dh]; positions: broadcastable to [..., S]."""
+    half = x.shape[-1] // 2
+    freqs = _rope_freqs(x.shape[-1], base)                    # [half]
+    angles = positions[..., None].astype(F32) * freqs         # [..., S, half]
+    angles = angles[..., None, :]                             # [..., S, 1, half]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, sections=(0.25, 0.375, 0.375),
+                base: float = 10000.0):
+    """Qwen2-VL multimodal RoPE.
+
+    positions3: [..., S, 3] (temporal, height, width position ids).  The
+    rotary frequency slots are split into three contiguous sections, each
+    rotated by its own position component.
+    """
+    half = x.shape[-1] // 2
+    s0 = int(half * sections[0])
+    s1 = int(half * sections[1])
+    bounds = (s0, s0 + s1)
+    freqs = _rope_freqs(x.shape[-1], base)
+    slot = jnp.arange(half)
+    comp = jnp.where(slot < bounds[0], 0, jnp.where(slot < bounds[1], 1, 2))
+    pos = jnp.take_along_axis(
+        positions3.astype(F32),
+        jnp.broadcast_to(comp, positions3.shape[:-1] + (half,)) * 0 +
+        comp, axis=-1)                                        # [..., S, half]
+    angles = (pos * freqs)[..., None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len: int, d_model: int):
+    pos = jnp.arange(seq_len, dtype=F32)[:, None]
+    dim = jnp.arange(0, d_model, 2, dtype=F32)[None, :]
+    angle = pos / jnp.power(10000.0, dim / d_model)
+    pe = jnp.zeros((seq_len, d_model), F32)
+    pe = pe.at[:, 0::2].set(jnp.sin(angle))
+    pe = pe.at[:, 1::2].set(jnp.cos(angle))
+    return pe
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+def chunked_attention(q, k, v, *, causal: bool, q_chunk: int = 512,
+                      kv_chunk: int = 512) -> jax.Array:
+    """Flash-style online-softmax attention.
+
+    q: [B, S, H, Dh]; k, v: [B, S, KH, Dh] with H a multiple of KH (GQA).
+    Returns [B, S, H, Dh].
+    """
+    B, S, H, Dh = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    q_chunk = min(q_chunk, S)
+    kv_chunk = min(kv_chunk, S)
+    nq, nk = S // q_chunk, S // kv_chunk
+    assert S % q_chunk == 0 and S % kv_chunk == 0, (S, q_chunk, kv_chunk)
+
+    scale = 1.0 / jnp.sqrt(jnp.asarray(Dh, F32))
+    qr = q.reshape(B, nq, q_chunk, KH, G, Dh)
+    kr = k.reshape(B, nk, kv_chunk, KH, Dh)
+    vr = v.reshape(B, nk, kv_chunk, KH, Dh)
+
+    def q_step(_, qi):
+        i, q_blk = qi                                    # [B, Cq, KH, G, Dh]
+
+        @jax.remat
+        def kv_step(carry, kj):
+            m, l, acc = carry
+            j, k_blk, v_blk = kj
+            s = jnp.einsum("bqkgd,bckd->bqkgc", q_blk, k_blk,
+                           preferred_element_type=F32) * scale  # [B,Cq,KH,G,Ck]
+            if causal:
+                qpos = i * q_chunk + jnp.arange(q_chunk)
+                kpos = j * kv_chunk + jnp.arange(kv_chunk)
+                mask = qpos[:, None] >= kpos[None, :]
+                s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bqkgc,bckd->bqkgd", p.astype(v_blk.dtype), v_blk,
+                preferred_element_type=F32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, q_chunk, KH, G), NEG_INF, F32)
+        l0 = jnp.zeros((B, q_chunk, KH, G), F32)
+        a0 = jnp.zeros((B, q_chunk, KH, G, Dh), F32)
+        ks = (jnp.arange(nk), jnp.moveaxis(kr, 1, 0), jnp.moveaxis(vr, 1, 0))
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), ks)
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out.astype(q.dtype)
+
+    # Double remat: without it the backward saves the softmax probs for
+    # every (q-chunk, kv-chunk) pair — i.e. the full S^2 attention matrix
+    # in f32 (+30 GB/chip on the 340B train cell).  Flash-style recompute
+    # keeps only the (m, l, acc) carries.
+    qs = (jnp.arange(nq), jnp.moveaxis(qr, 1, 0))
+    _, out = jax.lax.scan(jax.remat(q_step), None, qs)   # [nq,B,Cq,KH,G,Dh]
+    return jnp.moveaxis(out, 0, 1).reshape(B, S, H, Dh)
+
+
+def decode_attention(q, k_cache, v_cache, length=None) -> jax.Array:
+    """One-token attention: q [B, H, Dh]; caches [B, S, KH, Dh].
+
+    ``length``: optional [B] valid-length mask (entries >= length ignored).
+    """
+    B, H, Dh = q.shape
+    S, KH = k_cache.shape[1], k_cache.shape[2]
+    G = H // KH
+    if k_cache.dtype.itemsize == 1:     # f8 quantized cache: dequant here
+        k_cache = k_cache.astype(q.dtype)
+        v_cache = v_cache.astype(q.dtype)
+    qr = q.reshape(B, KH, G, Dh)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(Dh, F32))
+    # accumulate in f32 without materializing an f32 copy of the cache
+    s = jnp.einsum("bkgd,bskd->bkgs", qr, k_cache,
+                   preferred_element_type=F32) * scale
+    if length is not None:
+        mask = jnp.arange(S)[None, :] < length[:, None]
+        s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=F32)
+    return out.reshape(B, H, Dh).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+def mlp_apply(kind: str, x, w):
+    """w: dict of weights produced by the model builder."""
+    if kind == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, w["w_gate"])
+        u = jnp.einsum("bsd,df->bsf", x, w["w_up"])
+        h = jax.nn.silu(g.astype(F32)).astype(x.dtype) * u
+        return jnp.einsum("bsf,fd->bsd", h, w["w_down"])
+    if kind == "squared_relu":
+        h = jnp.einsum("bsd,df->bsf", x, w["w_in"])
+        h = jnp.square(jax.nn.relu(h.astype(F32))).astype(x.dtype)
+        return jnp.einsum("bsf,fd->bsd", h, w["w_out"])
+    if kind == "gelu":
+        h = jnp.einsum("bsd,df->bsf", x, w["w_in"]) + w["b_in"]
+        h = jax.nn.gelu(h.astype(F32)).astype(x.dtype)
+        return jnp.einsum("bsf,fd->bsd", h, w["w_out"]) + w["b_out"]
+    raise ValueError(kind)

@@ -1,0 +1,155 @@
+"""Mamba (S6) block for the Jamba hybrid architecture.
+
+Selective state-space layer: input-dependent (dt, B, C) with diagonal decay
+``exp(dt * A)``.  The sequence recurrence runs as a chunked ``lax.scan``
+(outer scan over chunks, inner scan over steps, remat on the chunk body) so
+backward-pass residuals stay at one [B, d_inner, d_state] carry per chunk
+boundary instead of per step.  Decode carries the (conv window, SSM state)
+pair — O(1) memory per token, which is what makes the 500k-token cell
+runnable for the hybrid/SSM families (DESIGN.md section 4).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .modules import ParamSpec
+
+F32 = jnp.float32
+
+
+def mamba_param_specs(d_model: int, d_state: int, d_conv: int, expand: int,
+                      dtype: str) -> Dict[str, ParamSpec]:
+    di = expand * d_model
+    dt_rank = max(math.ceil(d_model / 16), 1)
+    return {
+        "in_proj": ParamSpec((d_model, 2 * di), ("embed", "inner2"),
+                             dtype=dtype),
+        "conv_w": ParamSpec((d_conv, di), (None, "inner"), dtype=dtype),
+        "conv_b": ParamSpec((di,), ("inner",), dtype=dtype, init="zeros"),
+        "x_proj": ParamSpec((di, dt_rank + 2 * d_state), ("inner", None),
+                            dtype=dtype),
+        "dt_proj": ParamSpec((dt_rank, di), (None, "inner"), dtype=dtype),
+        "dt_bias": ParamSpec((di,), ("inner",), dtype="float32", init="zeros"),
+        "A_log": ParamSpec((di, d_state), ("inner", None), dtype="float32",
+                           init="ones"),
+        "D": ParamSpec((di,), ("inner",), dtype="float32", init="ones"),
+        "out_proj": ParamSpec((di, d_model), ("inner", "embed"), dtype=dtype,
+                              init="scaled"),
+    }
+
+
+def _ssm_inputs(w, x):
+    """Shared front half: projections, causal conv, selective params."""
+    di = w["dt_proj"].shape[1]
+    d_state = w["A_log"].shape[1]
+    dt_rank = w["dt_proj"].shape[0]
+    xz = jnp.einsum("bsd,de->bse", x, w["in_proj"])
+    xs, z = jnp.split(xz, 2, axis=-1)                     # [B,S,di] each
+    return xs, z, di, d_state, dt_rank
+
+
+def _selective(w, xs_conv):
+    dt_rank = w["dt_proj"].shape[0]
+    d_state = w["A_log"].shape[1]
+    x_dbl = jnp.einsum("bsi,ij->bsj", xs_conv, w["x_proj"])
+    dt, Bs, Cs = jnp.split(x_dbl.astype(F32),
+                           [dt_rank, dt_rank + d_state], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("bsr,ri->bsi", dt,
+                                    w["dt_proj"].astype(F32)) + w["dt_bias"])
+    A = -jnp.exp(w["A_log"])                              # [di, ds]
+    return dt, Bs, Cs, A
+
+
+def causal_conv(xs, conv_w, conv_b):
+    """Depthwise causal conv over time: xs [B,S,di], conv_w [K,di]."""
+    K = conv_w.shape[0]
+    pad = jnp.pad(xs, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xs.shape[1], :] * conv_w[i] for i in range(K))
+    return jax.nn.silu((out + conv_b).astype(F32)).astype(xs.dtype)
+
+
+def mamba_apply(w, x: jax.Array, *, chunk: int = 512) -> jax.Array:
+    """Training/prefill forward: x [B, S, D] -> [B, S, D].
+
+    The *entire layer* (projections, conv, selective scan, gating, output
+    projection) is chunked over S: an outer ``lax.scan`` carries the
+    (SSM state, conv tail) pair and each remat'd chunk body works on
+    [B, chunk, ...] slabs.  Materializing the full-sequence [B, S, 2*di]
+    intermediates instead costs ~100 GiB/chip on the 32k-prefill cell
+    (EXPERIMENTS.md §Dry-run iteration log).
+    """
+    B, S, D = x.shape
+    di = w["dt_proj"].shape[1]
+    d_state = w["A_log"].shape[1]
+    K = w["conv_w"].shape[0]
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+    A = -jnp.exp(w["A_log"])
+
+    def chunk_body(carry, x_c):
+        h, tail = carry                                   # [B,di,ds],[B,K-1,di]
+        xz = jnp.einsum("bsd,de->bse", x_c, w["in_proj"])
+        xs, z = jnp.split(xz, 2, axis=-1)
+        window = jnp.concatenate([tail, xs], axis=1)      # [B,K-1+chunk,di]
+        conv = sum(window[:, i:i + chunk, :] * w["conv_w"][i]
+                   for i in range(K))
+        conv = jax.nn.silu((conv + w["conv_b"]).astype(F32)).astype(xs.dtype)
+        dt, Bs, Cs, _ = _selective(w, conv)
+
+        def step(hh, a):
+            dt_t, B_t, C_t, x_t = a
+            dA = jnp.exp(dt_t[..., None] * A)
+            dBx = dt_t[..., None] * B_t[:, None, :] * x_t[..., None]
+            hh = dA * hh + dBx
+            y = jnp.einsum("bis,bs->bi", hh, C_t)
+            return hh, y.astype(x_c.dtype)
+
+        h, ys = jax.lax.scan(step, h,
+                             (jnp.moveaxis(dt, 1, 0),
+                              jnp.moveaxis(Bs, 1, 0),
+                              jnp.moveaxis(Cs, 1, 0),
+                              jnp.moveaxis(conv.astype(F32), 1, 0)))
+        y = jnp.moveaxis(ys, 0, 1).astype(F32)            # [B,chunk,di]
+        y = (y + w["D"] * conv.astype(F32)) * jax.nn.silu(z.astype(F32))
+        out_c = jnp.einsum("bsi,id->bsd", y.astype(x_c.dtype),
+                           w["out_proj"])
+        return (h, window[:, chunk:]), out_c
+
+    h0 = jnp.zeros((B, di, d_state), F32)
+    tail0 = jnp.zeros((B, K - 1, di), x.dtype)
+    xs_chunks = jnp.moveaxis(x.reshape(B, nc, chunk, D), 1, 0)
+    _, outs = jax.lax.scan(jax.remat(chunk_body), (h0, tail0), xs_chunks)
+    return jnp.moveaxis(outs, 0, 1).reshape(B, S, D)
+
+
+def mamba_decode_init(w, batch: int):
+    di = w["dt_proj"].shape[1]
+    d_state = w["A_log"].shape[1]
+    K = w["conv_w"].shape[0]
+    return {"conv": jnp.zeros((batch, K - 1, di), w["in_proj"].dtype),
+            "ssm": jnp.zeros((batch, di, d_state), F32)}
+
+
+def mamba_decode(w, state: Dict, x: jax.Array) -> Tuple[Dict, jax.Array]:
+    """One-token decode: x [B, D] -> (new_state, y [B, D])."""
+    B = x.shape[0]
+    xs, z, di, d_state, _ = _ssm_inputs(w, x[:, None, :])
+    xs, z = xs[:, 0], z[:, 0]                             # [B,di]
+    K = w["conv_w"].shape[0]
+    window = jnp.concatenate([state["conv"], xs[:, None, :]], axis=1)
+    conv = sum(window[:, i, :] * w["conv_w"][i] for i in range(K))
+    conv = jax.nn.silu((conv + w["conv_b"]).astype(F32)).astype(xs.dtype)
+    dt, Bs, Cs, A = _selective(w, conv[:, None, :])
+    dt, Bs, Cs = dt[:, 0], Bs[:, 0], Cs[:, 0]
+    dA = jnp.exp(dt[..., None] * A)
+    h = dA * state["ssm"] + dt[..., None] * Bs[:, None, :] \
+        * conv.astype(F32)[..., None]
+    y = jnp.einsum("bis,bs->bi", h, Cs)
+    y = (y + w["D"] * conv.astype(F32)) * jax.nn.silu(z.astype(F32))
+    out = jnp.einsum("bi,id->bd", y.astype(x.dtype), w["out_proj"])
+    return {"conv": window[:, 1:], "ssm": h}, out

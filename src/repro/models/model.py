@@ -1,0 +1,498 @@
+"""Architecture assembly: ArchConfig -> params / train / prefill / decode.
+
+Layers are grouped into *periods* (dense archs: period 1; llama4-maverick:
+2 — MoE every other layer; jamba: 8 — attention at offset 3, MoE on odd
+offsets) and parameters are stacked over period groups so the whole stack
+lowers as one ``lax.scan`` — HLO size and compile time stay bounded for
+96-layer configs.  Each group body is ``jax.remat``-wrapped (policy
+configurable).
+
+Decode state per period position:
+  attention  -> KV cache [G, B, S, KH, Dh] (dense) — the paged variant
+                lives in ``repro.serving`` / ``repro.memsys``
+  mamba      -> conv window + SSM state (O(1) per token)
+  rwkv       -> outer-product state + token-shift registers (O(1))
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import layers, mamba as mamba_mod, moe as moe_mod, rwkv as rwkv_mod
+from .modules import ParamSpec, abstract_params, init_params
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# layer schedule
+# ---------------------------------------------------------------------------
+def period_of(cfg: ArchConfig) -> int:
+    p = cfg.attn_every
+    if cfg.moe is not None:
+        p = max(p, cfg.moe.every)
+        assert p % cfg.moe.every == 0
+    if cfg.attn_every > 1:
+        assert p % cfg.attn_every == 0
+    return p
+
+
+def layer_kinds(cfg: ArchConfig) -> List[Tuple[str, str]]:
+    """(mixer, ffn) kind per period position."""
+    kinds = []
+    for i in range(period_of(cfg)):
+        if cfg.rwkv:
+            mixer = "time_mix"
+        elif cfg.mamba is not None and cfg.attn_every > 1:
+            # jamba: one attention layer per period, at offset attn_every//2-1
+            mixer = "attn" if i == (cfg.attn_every // 2 - 1) else "mamba"
+        else:
+            mixer = "attn"
+        if cfg.rwkv:
+            ffn = "channel_mix"
+        elif cfg.moe is not None and (i % cfg.moe.every
+                                      == cfg.moe.every - 1):
+            ffn = "moe"
+        else:
+            ffn = "mlp"
+        kinds.append((mixer, ffn))
+    return kinds
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+def _norm_specs(cfg: ArchConfig, name: str) -> Dict[str, ParamSpec]:
+    s = {f"{name}_scale": ParamSpec((cfg.d_model,), ("embed",),
+                                    dtype="float32", init="ones")}
+    if cfg.encoder_only:   # hubert uses LayerNorm with bias
+        s[f"{name}_bias"] = ParamSpec((cfg.d_model,), ("embed",),
+                                      dtype="float32", init="zeros")
+    return s
+
+
+def _attn_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    d, H, KH, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = cfg.dtype
+    s = {
+        "wq": ParamSpec((d, H * Dh), ("embed", "heads_mm"), dtype=dt),
+        "wk": ParamSpec((d, KH * Dh), ("embed", "kv_mm"), dtype=dt),
+        "wv": ParamSpec((d, KH * Dh), ("embed", "kv_mm"), dtype=dt),
+        "wo": ParamSpec((H * Dh, d), ("heads_mm", "embed"), dtype=dt,
+                        init="scaled"),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = ParamSpec((H * Dh,), ("heads_mm",), dtype=dt, init="zeros")
+        s["bk"] = ParamSpec((KH * Dh,), ("kv_mm",), dtype=dt, init="zeros")
+        s["bv"] = ParamSpec((KH * Dh,), ("kv_mm",), dtype=dt, init="zeros")
+    return s
+
+
+def _mlp_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    d, f, dt = cfg.d_model, cfg.d_ff, cfg.dtype
+    if cfg.mlp == "swiglu":
+        return {"w_gate": ParamSpec((d, f), ("embed", "ff"), dtype=dt),
+                "w_up": ParamSpec((d, f), ("embed", "ff"), dtype=dt),
+                "w_down": ParamSpec((f, d), ("ff", "embed"), dtype=dt,
+                                    init="scaled")}
+    if cfg.mlp == "squared_relu":
+        return {"w_in": ParamSpec((d, f), ("embed", "ff"), dtype=dt),
+                "w_out": ParamSpec((f, d), ("ff", "embed"), dtype=dt,
+                                   init="scaled")}
+    # gelu (hubert)
+    return {"w_in": ParamSpec((d, f), ("embed", "ff"), dtype=dt),
+            "b_in": ParamSpec((f,), ("ff",), dtype=dt, init="zeros"),
+            "w_out": ParamSpec((f, d), ("ff", "embed"), dtype=dt,
+                               init="scaled"),
+            "b_out": ParamSpec((d,), ("embed",), dtype=dt, init="zeros")}
+
+
+def _position_specs(cfg: ArchConfig, mixer: str, ffn: str) -> Dict:
+    s: Dict[str, Any] = {}
+    s.update(_norm_specs(cfg, "norm1"))
+    if mixer == "attn":
+        s["attn"] = _attn_specs(cfg)
+    elif mixer == "mamba":
+        mb = cfg.mamba
+        s["mamba"] = mamba_mod.mamba_param_specs(
+            cfg.d_model, mb.d_state, mb.d_conv, mb.expand, cfg.dtype)
+    elif mixer == "time_mix":
+        s["time_mix"] = rwkv_mod.rwkv_time_mix_specs(cfg.d_model, cfg.dtype)
+    s.update(_norm_specs(cfg, "norm2"))
+    if ffn == "moe":
+        s["moe"] = moe_mod.moe_param_specs(
+            cfg.d_model, cfg.moe.d_ff, cfg.moe.n_experts, cfg.mlp,
+            cfg.moe.shared_expert, cfg.dtype)
+    elif ffn == "mlp":
+        s["mlp"] = _mlp_specs(cfg)
+    else:
+        s["channel_mix"] = rwkv_mod.rwkv_channel_mix_specs(
+            cfg.d_model, cfg.d_ff, cfg.dtype)
+    return s
+
+
+def _stack_specs(tree, n: int):
+    """Prepend a stacking ("layers") axis to every spec in the tree."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.logical_axes,
+                            dtype=s.dtype, init=s.init, scale=s.scale),
+        tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def param_specs(cfg: ArchConfig) -> Dict:
+    period = period_of(cfg)
+    n_groups = cfg.n_layers // period
+    assert n_groups * period == cfg.n_layers, (cfg.n_layers, period)
+    kinds = layer_kinds(cfg)
+    specs: Dict[str, Any] = {
+        "embed": ParamSpec((cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                           dtype=cfg.dtype),
+        "final_norm": _norm_specs(cfg, "final"),
+        "layers": {f"pos{i}": _stack_specs(_position_specs(cfg, *kinds[i]),
+                                           n_groups)
+                   for i in range(period)},
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ParamSpec((cfg.d_model, cfg.vocab),
+                                     ("embed", "vocab"), dtype=cfg.dtype)
+    if cfg.frontend == "vision":
+        specs["patch_proj"] = ParamSpec((cfg.d_model, cfg.d_model),
+                                        ("embed", "embed_out"),
+                                        dtype=cfg.dtype)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+def _norm(cfg: ArchConfig, p, name, x):
+    if cfg.encoder_only:
+        return layers.layer_norm(x, p[f"{name}_scale"], p[f"{name}_bias"],
+                                 cfg.norm_eps)
+    return layers.rms_norm(x, p[f"{name}_scale"], cfg.norm_eps)
+
+
+def _attn_full(cfg: ArchConfig, w, x, positions, mrope_pos=None):
+    """Training/prefill attention over the full sequence."""
+    B, S, D = x.shape
+    H, KH, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,de->bse", x, w["wq"])
+    k = jnp.einsum("bsd,de->bse", x, w["wk"])
+    v = jnp.einsum("bsd,de->bse", x, w["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + w["bq"], k + w["bk"], v + w["bv"]
+    q = q.reshape(B, S, H, Dh)
+    k = k.reshape(B, S, KH, Dh)
+    v = v.reshape(B, S, KH, Dh)
+    if cfg.rope == "rope":
+        q = layers.apply_rope(q, positions)
+        k = layers.apply_rope(k, positions)
+    elif cfg.rope == "mrope":
+        q = layers.apply_mrope(q, mrope_pos)
+        k = layers.apply_mrope(k, mrope_pos)
+    out = layers.chunked_attention(q, k, v, causal=not cfg.encoder_only)
+    out = out.reshape(B, S, H * Dh)
+    return jnp.einsum("bse,ed->bsd", out, w["wo"]), (k, v)
+
+
+def _apply_group_full(cfg: ArchConfig, kinds, gparams, x, positions,
+                      mrope_pos, collect_kv: bool):
+    """One period of layers (full-sequence mode).  Returns (x, aux, kvs)."""
+    aux = jnp.zeros((), F32)
+    kvs = []
+    for i, (mixer, ffn) in enumerate(kinds):
+        p = gparams[f"pos{i}"]
+        h = _norm(cfg, p, "norm1", x)
+        if mixer == "attn":
+            y, kv = _attn_full(cfg, p["attn"], h, positions, mrope_pos)
+            if collect_kv:
+                kvs.append(kv)
+        elif mixer == "mamba":
+            y = mamba_mod.mamba_apply(p["mamba"], h)
+        else:
+            y = rwkv_mod.time_mix_apply(p["time_mix"], h)
+        x = x + y
+        h = _norm(cfg, p, "norm2", x)
+        if ffn == "moe":
+            y, a = moe_mod.moe_apply(p["moe"], h, top_k=cfg.moe.top_k,
+                                     capacity_factor=cfg.moe.capacity_factor,
+                                     mlp=cfg.mlp)
+            aux = aux + a
+        elif ffn == "mlp":
+            y = layers.mlp_apply(cfg.mlp, h, p["mlp"])
+        else:
+            y = rwkv_mod.channel_mix_apply(p["channel_mix"], h)
+        x = x + y
+    return x, aux, kvs
+
+
+def _embed(cfg: ArchConfig, params, batch) -> Tuple[jax.Array, Any]:
+    """Token/frontend embedding.  Returns (x [B,S,D], mrope_pos or None)."""
+    if cfg.frontend == "audio":
+        x = batch["frame_embeds"].astype(jnp.dtype(cfg.dtype))
+        pe = layers.sinusoidal_positions(x.shape[1], cfg.d_model)
+        return x + pe.astype(x.dtype), None
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    mrope_pos = None
+    if cfg.frontend == "vision":
+        patches = jnp.einsum("bsd,de->bse",
+                             batch["patch_embeds"].astype(x.dtype),
+                             params["patch_proj"])
+        x = jnp.concatenate([patches, x], axis=1)
+        mrope_pos = batch["mrope_pos"]
+    return x, mrope_pos
+
+
+def _logits_chunk(cfg, params, h):
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return jnp.einsum("bsd,dv->bsv", h, head)
+
+
+def forward(cfg: ArchConfig, params, batch, *, remat_policy: str = "full",
+            collect_kv: bool = False, act_constraint=None):
+    """Full-sequence forward.  Returns (hidden [B,S,D], aux, kv_caches).
+
+    ``act_constraint``: optional fn applied to the [B,S,D] residual stream
+    at every group boundary — e.g. a with_sharding_constraint implementing
+    sequence parallelism (S over "model"), which divides the per-chip
+    scan-carry/remat footprint by the TP degree.
+    """
+    kinds = layer_kinds(cfg)
+    x, mrope_pos = _embed(cfg, params, batch)
+    B, S, _ = x.shape
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    if act_constraint is not None:
+        x = act_constraint(x)
+
+    def group_fn(x, gparams):
+        y, aux, kvs = _apply_group_full(cfg, kinds, gparams, x, positions,
+                                        mrope_pos, collect_kv)
+        if act_constraint is not None:
+            y = act_constraint(y)
+        return y, (aux, tuple(kvs) if collect_kv else ())
+
+    if remat_policy == "full":
+        group_fn = jax.remat(group_fn)
+    elif remat_policy == "dots":
+        group_fn = jax.remat(
+            group_fn,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    x, (auxs, kvs) = jax.lax.scan(group_fn, x, params["layers"])
+    x = _norm(cfg, params["final_norm"], "final", x)
+    return x, jnp.sum(auxs), kvs
+
+
+def lm_loss(cfg: ArchConfig, params, batch, *, remat_policy: str = "full",
+            loss_chunk: int = 512, aux_weight: float = 0.01,
+            act_constraint=None) -> jax.Array:
+    """Next-token (or frame-target) cross entropy, chunked over S."""
+    h, aux, _ = forward(cfg, params, batch, remat_policy=remat_policy,
+                        act_constraint=act_constraint)
+    targets = batch["targets"]
+    if cfg.frontend == "vision":     # loss over text positions only
+        h = h[:, -targets.shape[1]:, :]
+    B, S, D = h.shape
+    loss_chunk = min(loss_chunk, S)
+    nc = S // loss_chunk
+
+    def chunk_fn(acc, args):
+        hc, tc = args
+        logits = _logits_chunk(cfg, params, hc).astype(F32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(logits, tc[..., None],
+                                     axis=-1)[..., 0]
+        return acc + jnp.sum(lse - picked), None
+
+    hs = jnp.moveaxis(h[:, :nc * loss_chunk].reshape(B, nc, loss_chunk, D),
+                      1, 0)
+    ts = jnp.moveaxis(targets[:, :nc * loss_chunk].reshape(B, nc, loss_chunk),
+                      1, 0)
+    total, _ = jax.lax.scan(jax.remat(chunk_fn), jnp.zeros((), F32), (hs, ts))
+    return total / (B * nc * loss_chunk) + aux_weight * aux
+
+
+def prefill(cfg: ArchConfig, params, batch, *, remat_policy: str = "none",
+            act_constraint=None):
+    """Returns (last-token logits [B, V], stacked KV caches per position)."""
+    h, _, kvs = forward(cfg, params, batch, remat_policy=remat_policy,
+                        collect_kv=cfg.n_heads > 0 and not cfg.rwkv,
+                        act_constraint=act_constraint)
+    logits = _logits_chunk(cfg, params, h[:, -1:, :])[:, 0]
+    return logits, kvs
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+def init_decode_state(cfg: ArchConfig, batch: int, max_seq: int,
+                      abstract: bool = False,
+                      kv_dtype: Optional[str] = None) -> Dict:
+    """Per-period-position decode state, stacked over groups.
+
+    ``kv_dtype``: override the KV-cache element type (e.g. float8_e4m3fn
+    — halves decode HBM traffic; §Perf hillclimb on the decode cell).
+    """
+    period = period_of(cfg)
+    G = cfg.n_layers // period
+    kinds = layer_kinds(cfg)
+    dt = jnp.dtype(kv_dtype) if kv_dtype else jnp.dtype(cfg.dtype)
+    state: Dict[str, Any] = {}
+
+    def make(shape, dtype):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, dtype)
+        return jnp.zeros(shape, dtype)
+
+    for i, (mixer, _) in enumerate(kinds):
+        key = f"pos{i}"
+        if mixer == "attn":
+            KH, Dh = cfg.n_kv_heads, cfg.head_dim
+            state[key] = {
+                "k": make((G, batch, max_seq, KH, Dh), dt),
+                "v": make((G, batch, max_seq, KH, Dh), dt)}
+        elif mixer == "mamba":
+            di = cfg.mamba.expand * cfg.d_model
+            K = cfg.mamba.d_conv
+            state[key] = {
+                "conv": make((G, batch, K - 1, di), dt),
+                "ssm": make((G, batch, di, cfg.mamba.d_state), F32)}
+        else:  # rwkv time-mix (+ channel-mix shift registers)
+            H = cfg.d_model // rwkv_mod.HEAD
+            state[key] = {
+                "wkv": make((G, batch, H, rwkv_mod.HEAD, rwkv_mod.HEAD), F32),
+                "x_tm": make((G, batch, cfg.d_model), dt),
+                "x_cm": make((G, batch, cfg.d_model), dt)}
+    return state
+
+
+def decode_step(cfg: ArchConfig, params, state: Dict, tokens: jax.Array,
+                pos: jax.Array) -> Tuple[Dict, jax.Array]:
+    """One decode step: tokens [B] int32, pos [] int32 (cache write index).
+
+    Returns (new_state, logits [B, V]).
+
+    The decode state rides the scan *carry* (not xs/ys): each iteration
+    dynamic-slices its group's slab and writes it back in place, which XLA
+    aliases through the while loop — passing the caches as scan inputs/
+    outputs instead materializes several full-cache copies (measured: +35 GB
+    per chip on the 340B decode cell, see EXPERIMENTS.md §Dry-run).
+    """
+    kinds = layer_kinds(cfg)
+    x = jnp.take(params["embed"], tokens, axis=0)        # [B, D]
+    B, D = x.shape
+    H, KH, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+
+    def group_fn(carry, gparams):
+        x, gi, full_state = carry
+        gstate = jax.tree.map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, gi, 0,
+                                                   keepdims=False),
+            full_state)
+        new_state = {}
+        for i, (mixer, ffn) in enumerate(kinds):
+            p = gparams[f"pos{i}"]
+            st = gstate[f"pos{i}"]
+            h = _norm(cfg, p, "norm1", x[:, None, :])[:, 0]
+            if mixer == "attn":
+                w = p["attn"]
+                q = jnp.einsum("bd,de->be", h, w["wq"])
+                k = jnp.einsum("bd,de->be", h, w["wk"])
+                v = jnp.einsum("bd,de->be", h, w["wv"])
+                if cfg.qkv_bias:
+                    q, k, v = q + w["bq"], k + w["bk"], v + w["bv"]
+                q = q.reshape(B, H, Dh)
+                k = k.reshape(B, KH, Dh)
+                v = v.reshape(B, KH, Dh)
+                if cfg.rope in ("rope", "mrope"):
+                    # decode positions are text positions; M-RoPE with equal
+                    # (t, h, w) components reduces exactly to RoPE
+                    posv = jnp.full((B, 1), pos, jnp.int32)
+                    q = layers.apply_rope(q[:, None], posv)[:, 0]
+                    k = layers.apply_rope(k[:, None], posv)[:, 0]
+                k_cache = st["k"].at[:, pos].set(k.astype(st["k"].dtype))
+                v_cache = st["v"].at[:, pos].set(v.astype(st["v"].dtype))
+                y = layers.decode_attention(q, k_cache, v_cache,
+                                            length=jnp.full((B,), pos + 1))
+                y = jnp.einsum("be,ed->bd", y.reshape(B, H * Dh), w["wo"])
+                new_state[f"pos{i}"] = {"k": k_cache, "v": v_cache}
+            elif mixer == "mamba":
+                ns, y = mamba_mod.mamba_decode(p["mamba"], st, h)
+                new_state[f"pos{i}"] = ns
+            else:
+                wkv, y = rwkv_mod.time_mix_decode(p["time_mix"], st["wkv"],
+                                                  st["x_tm"], h)
+                new_state[f"pos{i}"] = {"wkv": wkv, "x_tm": h,
+                                        "x_cm": st["x_cm"]}
+            x = x + y
+            h = _norm(cfg, p, "norm2", x[:, None, :])[:, 0]
+            if ffn == "moe":
+                y, _ = moe_mod.moe_apply(p["moe"], h[:, None, :],
+                                         top_k=cfg.moe.top_k,
+                                         capacity_factor=4.0, mlp=cfg.mlp)
+                y = y[:, 0]
+            elif ffn == "mlp":
+                y = layers.mlp_apply(cfg.mlp, h[:, None, :], p["mlp"])[:, 0]
+            else:
+                y = rwkv_mod.channel_mix_decode(p["channel_mix"],
+                                                new_state[f"pos{i}"]["x_cm"],
+                                                h)
+                new_state[f"pos{i}"] = dict(new_state[f"pos{i}"], x_cm=h)
+            x = x + y
+        full_state = jax.tree.map(
+            lambda a, n: jax.lax.dynamic_update_index_in_dim(
+                a, n.astype(a.dtype), gi, 0),
+            full_state, new_state)
+        return (x, gi + 1, full_state), None
+
+    (x, _, new_state), _ = jax.lax.scan(
+        group_fn, (x, jnp.zeros((), jnp.int32), state), params["layers"])
+    x = _norm(cfg, params["final_norm"], "final", x[:, None, :])[:, 0]
+    logits = _logits_chunk(cfg, params, x[:, None, :])[:, 0]
+    return new_state, logits
+
+
+# ---------------------------------------------------------------------------
+# input specs (dry-run stand-ins; DESIGN.md: frontends are stubs)
+# ---------------------------------------------------------------------------
+def input_specs(cfg: ArchConfig, seq_len: int, batch: int,
+                kind: str) -> Dict[str, jax.ShapeDtypeStruct]:
+    i32 = jnp.int32
+    dt = jnp.dtype(cfg.dtype)
+    if kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((batch,), i32)}
+    if cfg.frontend == "audio":
+        specs = {"frame_embeds": jax.ShapeDtypeStruct(
+            (batch, seq_len, cfg.d_model), dt)}
+        if kind == "train":
+            specs["targets"] = jax.ShapeDtypeStruct((batch, seq_len), i32)
+        return specs
+    if cfg.frontend == "vision":
+        s_img = seq_len // 4                       # stubbed patch stream
+        s_txt = seq_len - s_img
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((batch, s_txt), i32),
+            "patch_embeds": jax.ShapeDtypeStruct((batch, s_img, cfg.d_model),
+                                                 dt),
+            "mrope_pos": jax.ShapeDtypeStruct((batch, seq_len, 3), i32),
+        }
+        if kind == "train":
+            specs["targets"] = jax.ShapeDtypeStruct((batch, s_txt), i32)
+        return specs
+    specs = {"tokens": jax.ShapeDtypeStruct((batch, seq_len), i32)}
+    if kind == "train":
+        specs["targets"] = jax.ShapeDtypeStruct((batch, seq_len), i32)
+    return specs
+
+
+def make_abstract_params(cfg: ArchConfig):
+    return abstract_params(param_specs(cfg))
+
+
+def make_params(cfg: ArchConfig, key: jax.Array):
+    return init_params(param_specs(cfg), key)

@@ -1,0 +1,70 @@
+"""Minimal functional module system: parameter specs with logical axes.
+
+Models declare their parameters as a pytree of :class:`ParamSpec` (shape,
+dtype, logical axis names, initializer).  From that single declaration we
+derive:
+
+  * ``abstract_params``  — ShapeDtypeStruct tree for ``.lower()`` dry-runs
+    (no host allocation for 340B-parameter configs),
+  * ``init_params``      — real arrays for smoke tests / the 100M example,
+  * ``param_shardings``  — PartitionSpec tree from logical-axis rules
+    (DP/TP/EP mapping lives in ``repro.distributed.sharding``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    logical_axes: Tuple[Optional[str], ...]   # e.g. ("vocab", "embed")
+    dtype: str = "bfloat16"
+    init: str = "normal"                      # normal | zeros | ones | scaled
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical_axes), \
+            f"{self.shape} vs {self.logical_axes}"
+
+
+def abstract_params(specs) -> dict:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype)),
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def init_params(specs, key: jax.Array) -> dict:
+    leaves, treedef = jax.tree.flatten(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+
+    def make(s: ParamSpec, k):
+        dt = jnp.dtype(s.dtype)
+        if s.init == "zeros":
+            return jnp.zeros(s.shape, dt)
+        if s.init == "ones":
+            return jnp.ones(s.shape, dt)
+        scale = s.scale
+        if s.init == "scaled":  # 1/sqrt(fan_in) output projections
+            scale = s.scale / np.sqrt(max(s.shape[0], 1))
+        return (jax.random.normal(k, s.shape, jnp.float32) * scale).astype(dt)
+
+    return jax.tree.unflatten(treedef, [make(s, k) for s, k in
+                                        zip(leaves, keys)])
+
+
+def logical_axes_tree(specs):
+    return jax.tree.map(lambda s: s.logical_axes, specs,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def count_params(specs) -> int:
+    leaves = jax.tree.leaves(specs,
+                             is_leaf=lambda x: isinstance(x, ParamSpec))
+    return sum(int(np.prod(s.shape)) for s in leaves)

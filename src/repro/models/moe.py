@@ -1,0 +1,124 @@
+"""Mixture-of-Experts layer: top-k routing, capacity-based dispatch, EP.
+
+Switch/GShard-style dense dispatch: tokens are routed per sequence with
+capacity ``C = ceil(S * top_k / E * capacity_factor)``; the [B, S, E, C]
+dispatch tensor is sharded over the expert axis (mapped to the "model" mesh
+axis), which keeps it at tens of MB per device for the assigned shapes.
+Expert weights are expert-parallel over the same axis.  Overflowed tokens
+are dropped (contribute zero), standard for capacity-based MoE.
+
+Returns the load-balancing auxiliary loss (Switch, eq. 4) alongside the
+output.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .modules import ParamSpec
+
+F32 = jnp.float32
+
+
+def moe_param_specs(d_model: int, d_ff: int, n_experts: int, mlp: str,
+                    shared_expert: bool, dtype: str) -> Dict[str, ParamSpec]:
+    p = {
+        "router": ParamSpec((d_model, n_experts), ("embed", None),
+                            dtype="float32"),
+    }
+    if mlp == "swiglu":
+        p["w_gate"] = ParamSpec((n_experts, d_model, d_ff),
+                                ("experts", "embed", "ff"), dtype=dtype)
+        p["w_up"] = ParamSpec((n_experts, d_model, d_ff),
+                              ("experts", "embed", "ff"), dtype=dtype)
+        p["w_down"] = ParamSpec((n_experts, d_ff, d_model),
+                                ("experts", "ff", "embed"), dtype=dtype,
+                                init="scaled")
+    else:
+        p["w_in"] = ParamSpec((n_experts, d_model, d_ff),
+                              ("experts", "embed", "ff"), dtype=dtype)
+        p["w_out"] = ParamSpec((n_experts, d_ff, d_model),
+                               ("experts", "ff", "embed"), dtype=dtype,
+                               init="scaled")
+    if shared_expert:
+        p["shared_w_gate"] = ParamSpec((d_model, d_ff), ("embed", "ff"),
+                                       dtype=dtype)
+        p["shared_w_up"] = ParamSpec((d_model, d_ff), ("embed", "ff"),
+                                     dtype=dtype)
+        p["shared_w_down"] = ParamSpec((d_ff, d_model), ("ff", "embed"),
+                                       dtype=dtype, init="scaled")
+    return p
+
+
+def moe_apply(w, x: jax.Array, *, top_k: int, capacity_factor: float,
+              mlp: str, seq_chunk: int = 4096) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, S, D] -> ([B, S, D], aux_loss scalar).
+
+    Long sequences are processed in S-chunks (capacity per chunk, standard
+    for capacity-based MoE): the [B, S, E, C] dispatch/combine tensors at
+    S=32k otherwise dominate per-chip memory (~100 GiB on the jamba prefill
+    cell — EXPERIMENTS.md §Dry-run iteration log).
+    """
+    B, S, D = x.shape
+    if S > seq_chunk and S % seq_chunk == 0:
+        nc = S // seq_chunk
+        xs = jnp.moveaxis(x.reshape(B, nc, seq_chunk, D), 1, 0)
+
+        def chunk_fn(acc, xc):
+            yc, aux = moe_apply(w, xc, top_k=top_k,
+                                capacity_factor=capacity_factor, mlp=mlp,
+                                seq_chunk=seq_chunk)
+            return acc + aux, yc
+
+        aux, ys = jax.lax.scan(chunk_fn, jnp.zeros((), F32), xs)
+        return jnp.moveaxis(ys, 0, 1).reshape(B, S, D), aux / nc
+    E = w["router"].shape[1]
+    C = max(int(math.ceil(S * top_k / E * capacity_factor)), 1)
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(F32),
+                        w["router"].astype(F32))
+    probs = jax.nn.softmax(logits, axis=-1)                    # [B,S,E]
+    gate_vals, sel = jax.lax.top_k(probs, top_k)               # [B,S,k]
+
+    # Switch load-balance loss: E * sum_e f_e * p_e
+    density = jnp.mean(jax.nn.one_hot(sel[..., 0], E, dtype=F32), axis=(0, 1))
+    p_mean = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(density * p_mean)
+
+    # position of each (token, k-slot) within its expert's capacity buffer
+    onehot = jax.nn.one_hot(sel, E, dtype=jnp.int32)           # [B,S,k,E]
+    flat = onehot.reshape(B, S * top_k, E)
+    pos = jnp.cumsum(flat, axis=1) - 1                         # [B,S*k,E]
+    pos = jnp.sum(pos.reshape(B, S, top_k, E) * onehot, axis=-1)  # [B,S,k]
+    keep = pos < C
+
+    # build dispatch [B,S,E,C]: combine one-hot over expert and slot
+    # (overflowed slots map to C which one_hot drops -> token dropped)
+    slot_oh = jax.nn.one_hot(jnp.where(keep, pos, C), C,
+                             dtype=x.dtype)                    # [B,S,k,C]
+    exp_oh = jax.nn.one_hot(sel, E, dtype=x.dtype)             # [B,S,k,E]
+    dispatch = jnp.einsum("bske,bskc->bsec", exp_oh, slot_oh)  # [B,S,E,C]
+    combine = jnp.einsum("bske,bskc,bsk->bsec", exp_oh, slot_oh,
+                         gate_vals.astype(x.dtype))
+
+    xe = jnp.einsum("bsec,bsd->becd", dispatch, x)             # [B,E,C,D]
+    if mlp == "swiglu":
+        g = jnp.einsum("becd,edf->becf", xe, w["w_gate"])
+        u = jnp.einsum("becd,edf->becf", xe, w["w_up"])
+        h = jax.nn.silu(g.astype(F32)).astype(x.dtype) * u
+        ye = jnp.einsum("becf,efd->becd", h, w["w_down"])
+    else:
+        h = jnp.einsum("becd,edf->becf", xe, w["w_in"])
+        h = jnp.square(jax.nn.relu(h.astype(F32))).astype(x.dtype)
+        ye = jnp.einsum("becf,efd->becd", h, w["w_out"])
+    out = jnp.einsum("bsec,becd->bsd", combine, ye)
+
+    if "shared_w_gate" in w:
+        g = jnp.einsum("bsd,df->bsf", x, w["shared_w_gate"])
+        u = jnp.einsum("bsd,df->bsf", x, w["shared_w_up"])
+        h = jax.nn.silu(g.astype(F32)).astype(x.dtype) * u
+        out = out + jnp.einsum("bsf,fd->bsd", h, w["shared_w_down"])
+    return out, aux

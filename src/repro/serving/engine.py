@@ -1,0 +1,173 @@
+"""Continuous-batching serving engine over the tiered paged-KV cache.
+
+The scheduler is where the paper's policies become throughput:
+
+  * ACTIVE sequences decode in a fixed-size batch; their KV blocks live in
+    the HOT pool and — by the Radiant invariant — their block-table leaf
+    pages are HOT too, so the decode kernel's "page walk" (upper table ->
+    leaf -> block) never touches the slow tier.
+  * When a sequence PAUSES (preempted by arrivals), its blocks are demoted
+    to the COLD pool; the *last* demotion drags the leaf table page cold
+    (Algorithm 1).  The upper table never moves (BHi): resume scheduling
+    can inspect any sequence's table cheaply.
+  * On RESUME the blocks are promoted back; the first promotion drags the
+    leaf page hot before the sequence re-enters the batch.
+
+Compare policy="bind_none" (leaf pages pinned cold — every walk pays the
+slow tier) and policy="bind_all" (everything pinned hot — hot pool
+exhaustion stalls admission; the paper's section 3.5 pathology) in
+benchmarks/kv_tiering.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..memsys import tiered_kv as tkv
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt_len: int
+    max_new: int
+    generated: int = 0
+    state: str = "queued"      # queued | active | paused | done
+
+
+@dataclasses.dataclass
+class EngineStats:
+    steps: int = 0
+    tokens: int = 0
+    swaps_in: int = 0
+    swaps_out: int = 0
+    cold_walks: int = 0        # decode steps whose table walk touched COLD
+
+
+class TieredServingEngine:
+    """Scheduler + tiered KV; the model decode fn is injected (tests use a
+    toy model, examples use the real stack)."""
+
+    def __init__(self, *, n_groups: int, kv_heads: int, head_dim: int,
+                 block_size: int = 16, n_hot_blocks: int = 256,
+                 n_cold_blocks: int = 1024, n_seqs: int = 64,
+                 max_seq: int = 4096, active_slots: int = 4,
+                 radiant: bool = True):
+        self.kv = tkv.init(n_groups, n_hot_blocks, n_cold_blocks, block_size,
+                           kv_heads, head_dim, n_seqs, max_seq)
+        self.block_size = block_size
+        self.active_slots = active_slots
+        self.max_seq = max_seq
+        self.radiant = radiant
+        self.requests: Dict[int, Request] = {}
+        self.active: List[int] = []
+        self.queued: List[int] = []
+        self.paused: List[int] = []
+        self.stats = EngineStats()
+        self._append = jax.jit(tkv.append_token)
+        self._migrate = jax.jit(
+            tkv.migrate_sequence,
+            static_argnames=("to_tier", "max_blocks", "trigger_leaf"))
+        self._release = jax.jit(tkv.release_sequence,
+                                static_argnames=("max_blocks",))
+
+    # ------------------------------------------------------------------ API
+    def submit(self, req: Request):
+        self.requests[req.rid] = req
+        self.queued.append(req.rid)
+
+    def _max_blocks(self) -> int:
+        return -(-self.max_seq // self.block_size)
+
+    def _swap_out(self, rid: int):
+        self.kv = self._migrate(self.kv, jnp.asarray(rid), tkv.COLD,
+                                self._max_blocks(),
+                                trigger_leaf=self.radiant)
+        self.requests[rid].state = "paused"
+        self.paused.append(rid)
+        self.stats.swaps_out += 1
+
+    def _swap_in(self, rid: int):
+        self.kv = self._migrate(self.kv, jnp.asarray(rid), tkv.HOT,
+                                self._max_blocks(),
+                                trigger_leaf=self.radiant)
+        self.requests[rid].state = "active"
+        self.active.append(rid)
+        self.stats.swaps_in += 1
+
+    def schedule(self):
+        """Round-robin fairness: rotate one active seq out when the queue
+        has waiters; fill free slots from paused-then-queued."""
+        if (self.queued or self.paused) and len(self.active) >= self.active_slots:
+            victim = self.active.pop(0)
+            self._swap_out(victim)
+        while len(self.active) < self.active_slots:
+            if self.paused:
+                self._swap_in(self.paused.pop(0))
+            elif self.queued:
+                # activation == promotion: a queued request whose prefill
+                # spilled to the cold pool is pulled hot (and, under
+                # Radiant, its table leaf pages with it) before decoding
+                rid = self.queued.pop(0)
+                self.kv = self._migrate(self.kv, jnp.asarray(rid), tkv.HOT,
+                                        self._max_blocks(),
+                                        trigger_leaf=self.radiant)
+                self.requests[rid].state = "active"
+                self.active.append(rid)
+            else:
+                break
+
+    def prefill(self, rid: int, kv_tokens):
+        """Write prompt KV ([prompt_len, G, KH, Dh] pair) for a request."""
+        k_toks, v_toks = kv_tokens
+        for t in range(self.requests[rid].prompt_len):
+            self.kv = self._append(self.kv, jnp.asarray(rid),
+                                   k_toks[t], v_toks[t])
+
+    def decode_tick(self, decode_fn) -> Dict[int, int]:
+        """One decode step for the active batch.
+
+        ``decode_fn(kv, seq_ids) -> (k_new, v_new)`` produces each active
+        sequence's next-token KV ([G, KH, Dh] per seq); the engine appends
+        them and advances bookkeeping.  Returns {rid: new_len}.
+        """
+        out = {}
+        tier_now = np.asarray(self.kv.leaf_tier)
+        upper_now = np.asarray(self.kv.upper)
+        for rid in list(self.active):
+            # count walks that would touch cold table pages (shouldn't
+            # happen under Radiant for active sequences)
+            leafs = upper_now[rid]
+            leafs = leafs[leafs >= 0]
+            if len(leafs) and (tier_now[leafs] == tkv.COLD).any():
+                self.stats.cold_walks += 1
+            k_new, v_new = decode_fn(self.kv, rid)
+            self.kv = self._append(self.kv, jnp.asarray(rid), k_new, v_new)
+            req = self.requests[rid]
+            req.generated += 1
+            self.stats.tokens += 1
+            out[rid] = req.prompt_len + req.generated
+            if req.generated >= req.max_new:
+                req.state = "done"
+                self.active.remove(rid)
+                # free blocks + table pages (paper: PT pages are reclaimed
+                # when their data pages are freed)
+                self.kv = self._release(self.kv, jnp.asarray(rid),
+                                        self._max_blocks())
+        self.stats.steps += 1
+        return out
+
+    def run(self, decode_fn, max_ticks: int = 10000) -> EngineStats:
+        ticks = 0
+        while (self.queued or self.paused or self.active) \
+                and ticks < max_ticks:
+            self.schedule()
+            if not self.active:
+                break
+            self.decode_tick(decode_fn)
+            ticks += 1
+        return self.stats

@@ -1,0 +1,162 @@
+"""AdamW with sharded f32 state, cosine schedule, global-norm clipping.
+
+Optimizer moments shard exactly like their parameters (TP); with
+``zero1=True`` the largest replicated dimension of each moment is
+additionally sharded over the data axis (ZeRO-1): XLA then materializes the
+update as reduce-scatter + sharded-update + all-gather, cutting optimizer
+memory by the DP degree.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    zero1: bool = False
+    # Factored mode (Adafactor-style): bf16 first moment + row/col-factored
+    # f32 second moment.  Cuts optimizer memory from 8 to ~2 bytes/param —
+    # required to fit the 340B/400B train cells on a 256-chip pod.
+    factored: bool = False
+
+
+def schedule(cfg: OptConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    return cfg.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+
+
+def _v_shapes(shape) -> Tuple[Tuple[int, ...], Tuple[int, ...]]:
+    """Factored second-moment shapes: row/col stats over the last two dims."""
+    if len(shape) < 2:
+        return shape, ()
+    return shape[:-1], shape[:-2] + shape[-1:]
+
+
+def init_opt_state(params, factored: bool = False) -> Dict[str, Any]:
+    if not factored:
+        zeros = lambda p: jnp.zeros(p.shape, F32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+    m = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16), params)
+    vr = jax.tree.map(lambda p: jnp.zeros(_v_shapes(p.shape)[0], F32), params)
+    vc = jax.tree.map(lambda p: jnp.zeros(_v_shapes(p.shape)[1], F32), params)
+    return {"m": m, "vr": vr, "vc": vc, "step": jnp.zeros((), jnp.int32)}
+
+
+def abstract_opt_state(abstract_tree, factored: bool = False) -> Dict[str, Any]:
+    if not factored:
+        sds = lambda p: jax.ShapeDtypeStruct(p.shape, F32)
+        return {"m": jax.tree.map(sds, abstract_tree),
+                "v": jax.tree.map(sds, abstract_tree),
+                "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    return {
+        "m": jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, jnp.bfloat16),
+            abstract_tree),
+        "vr": jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct(_v_shapes(p.shape)[0], F32),
+            abstract_tree),
+        "vc": jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct(_v_shapes(p.shape)[1], F32),
+            abstract_tree),
+        "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+# Optimizer-state shardings live in repro.distributed.sharding
+# (opt_state_shardings), derived from the same ParamSpec logical axes.
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    sq = sum(jnp.sum(jnp.square(g.astype(F32)))
+             for g in jax.tree.leaves(grads))
+    norm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(F32) * scale).astype(g.dtype),
+                        grads), norm
+
+
+def adamw_update(cfg: OptConfig, params, grads, opt_state):
+    if cfg.factored:
+        return _factored_update(cfg, params, grads, opt_state)
+    step = opt_state["step"] + 1
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(F32)
+    bc2 = 1.0 - b2 ** step.astype(F32)
+
+    def upd(p, g, m, v):
+        g = g.astype(F32)
+        m_new = b1 * m + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) \
+            + cfg.weight_decay * p.astype(F32)
+        return (p.astype(F32) - lr * delta).astype(p.dtype), m_new, v_new
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(opt_state["m"])
+    flat_v = tdef.flatten_up_to(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v
+           in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}
+
+
+def _factored_update(cfg: OptConfig, params, grads, opt_state):
+    step = opt_state["step"] + 1
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+
+    def upd(p, g, m, vr, vc):
+        g = g.astype(F32)
+        g2 = jnp.square(g) + 1e-30
+        if g.ndim >= 2:
+            vr_new = b2 * vr + (1 - b2) * jnp.mean(g2, axis=-1)
+            vc_new = b2 * vc + (1 - b2) * jnp.mean(g2, axis=-2)
+            denom = jnp.sqrt(
+                vr_new[..., :, None] * vc_new[..., None, :]
+                / jnp.maximum(jnp.mean(vr_new, axis=-1,
+                                       keepdims=True)[..., None], 1e-30))
+        else:
+            vr_new = b2 * vr + (1 - b2) * g2
+            vc_new = vc
+            denom = jnp.sqrt(vr_new)
+        m_new = b1 * m.astype(F32) + (1 - b1) * g
+        delta = m_new / (denom + cfg.eps) + cfg.weight_decay * p.astype(F32)
+        return ((p.astype(F32) - lr * delta).astype(p.dtype),
+                m_new.astype(jnp.bfloat16), vr_new, vc_new)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(opt_state["m"])
+    flat_vr = tdef.flatten_up_to(opt_state["vr"])
+    flat_vc = tdef.flatten_up_to(opt_state["vc"])
+    out = [upd(*a) for a in zip(flat_p, flat_g, flat_m, flat_vr, flat_vc)]
+    return (tdef.unflatten([o[0] for o in out]),
+            {"m": tdef.unflatten([o[1] for o in out]),
+             "vr": tdef.unflatten([o[2] for o in out]),
+             "vc": tdef.unflatten([o[3] for o in out]),
+             "step": step})

@@ -1,0 +1,196 @@
+"""Train-step factories: microbatched grad accumulation, donation, and the
+optional compressed cross-DP gradient sync.
+
+Two paths:
+
+  * ``make_train_step`` — plain jit SPMD: batch sharded over ("pod","data"),
+    XLA inserts the gradient all-reduce.  This is the baseline lowered for
+    every dry-run cell.
+  * ``make_compressed_train_step`` — ``jax.shard_map`` manual over the DP
+    axes (model axis stays auto): per-shard grads are int8-quantized
+    per-tensor before the explicit cross-DP psum — 4x less traffic on the
+    scarce cross-pod links — then dequantized for the (replicated) AdamW
+    update.  Numerics validated against the plain path in tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from ..models import lm_loss
+from . import optimizer as opt_mod
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1            # grad-accumulation steps per train step
+    remat_policy: str = "full"       # none | dots | full
+    aux_weight: float = 0.01
+    compress_grads: Optional[str] = None   # None | "int8"
+    seq_shard: bool = False          # sequence parallelism on activations
+    accum_dtype: str = "float32"     # grad-accumulation dtype (bf16 halves
+    #                                  the accumulator for 340B+ cells)
+    opt: opt_mod.OptConfig = opt_mod.OptConfig()
+
+
+def batch_constraint(mesh: Mesh):
+    """DP-only activation constraint: [B, S, D] batch over ("pod","data").
+
+    Without an explicit constraint at group boundaries, SPMD sometimes
+    drops the batch sharding inside the layer scan and materializes
+    batch-replicated activations (measured +15 GB/chip on 32k prefill)."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    dp = dp[0] if len(dp) == 1 else dp
+    spec = P(dp, None, None)
+
+    def constrain(x):
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    return constrain
+
+
+def seq_constraint(mesh: Mesh):
+    """Sequence-parallel activation constraint: [B, S, D] -> S over model."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    dp = dp[0] if len(dp) == 1 else dp
+    spec = P(dp, "model", None)
+
+    def constrain(x):
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    return constrain
+
+
+def _split_microbatches(batch: Dict[str, jax.Array], n: int,
+                        mesh: Optional[Mesh] = None):
+    """[B, ...] -> [n, B/n, ...] per leaf.
+
+    The reshape would otherwise let SPMD move the batch sharding onto the
+    scanned microbatch dim (leaving each device with the *full* per-micro-
+    batch rows) — constrain dim 1 to the DP axes explicitly.
+    """
+    def one(x):
+        y = x.reshape((n, x.shape[0] // n) + x.shape[1:])
+        if mesh is not None:
+            dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+            dp = dp[0] if len(dp) == 1 else dp
+            spec = P(None, dp, *([None] * (y.ndim - 2)))
+            y = jax.lax.with_sharding_constraint(
+                y, NamedSharding(mesh, spec))
+        return y
+    return jax.tree.map(one, batch)
+
+
+def make_train_step(cfg: ArchConfig, tc: TrainConfig,
+                    mesh: Optional[Mesh] = None) -> Callable:
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    act = None
+    if mesh is not None:
+        act = seq_constraint(mesh) if tc.seq_shard else batch_constraint(mesh)
+
+    def loss_fn(params, mb):
+        return lm_loss(cfg, params, mb, remat_policy=tc.remat_policy,
+                       aux_weight=tc.aux_weight, act_constraint=act)
+
+    def train_step(params, opt_state, batch):
+        if tc.microbatches > 1:
+            mbs = _split_microbatches(batch, tc.microbatches, mesh)
+            adt = jnp.dtype(tc.accum_dtype)
+
+            def acc_fn(carry, mb):
+                loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+                acc_l, acc_g = carry
+                return (acc_l + loss,
+                        jax.tree.map(lambda a, g: a + g.astype(adt),
+                                     acc_g, grads)), None
+
+            zero = (jnp.zeros((), F32),
+                    jax.tree.map(lambda p: jnp.zeros(p.shape, adt), params))
+            (loss, grads), _ = jax.lax.scan(acc_fn, zero, mbs)
+            loss = loss / tc.microbatches
+            grads = jax.tree.map(lambda g: g / tc.microbatches, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+
+        grads, gnorm = opt_mod.clip_by_global_norm(grads, tc.opt.grad_clip)
+        params, opt_state = opt_mod.adamw_update(tc.opt, params, grads,
+                                                 opt_state)
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "lr": opt_mod.schedule(tc.opt, opt_state["step"])}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# compressed-gradient path (explicit DP collectives via shard_map)
+# ---------------------------------------------------------------------------
+def quantize_int8(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(F32)
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(F32) * scale
+
+
+def compressed_psum(grads, axes: Tuple[str, ...]):
+    """int8-compressed mean over DP axes (inside shard_map manual region).
+
+    Each leaf is quantized per-tensor, summed in int32 (no overflow for
+    <= 2^23 shards), and dequantized with the max scale — the standard
+    1-bit/8-bit-Adam style scheme without error feedback.
+    """
+    def one(g):
+        q, scale = quantize_int8(g.astype(F32))
+        scale = jax.lax.pmax(scale, axes)          # shared scale bound
+        q = jnp.clip(jnp.round(g.astype(F32) / scale), -127, 127
+                     ).astype(jnp.int8)
+        total = jax.lax.psum(q.astype(jnp.int32), axes)
+        n = jax.lax.psum(jnp.ones((), jnp.int32), axes)
+        return (total.astype(F32) * scale / n.astype(F32)).astype(g.dtype)
+    return jax.tree.map(one, grads)
+
+
+def make_compressed_train_step(cfg: ArchConfig, tc: TrainConfig,
+                               mesh: Mesh) -> Callable:
+    """shard_map train step: manual over DP axes, int8 gradient sync."""
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    other = tuple(a for a in mesh.shape if a not in dp_axes)
+
+    def loss_fn(params, mb):
+        return lm_loss(cfg, params, mb, remat_policy=tc.remat_policy,
+                       aux_weight=tc.aux_weight)
+
+    def per_shard(params, opt_state, batch):
+        # local grads on this DP shard (model axis handled by auto SPMD)
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        grads = jax.tree.map(lambda g: g.astype(F32), grads)
+        if tc.compress_grads == "int8":
+            grads = compressed_psum(grads, dp_axes)
+        else:
+            grads = jax.tree.map(
+                lambda g: jax.lax.pmean(g, dp_axes), grads)
+        loss = jax.lax.pmean(loss, dp_axes)
+        grads, gnorm = opt_mod.clip_by_global_norm(grads, tc.opt.grad_clip)
+        params, opt_state = opt_mod.adamw_update(tc.opt, params, grads,
+                                                 opt_state)
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "lr": opt_mod.schedule(tc.opt, opt_state["step"])}
+        return params, opt_state, metrics
+
+    batch_spec = P(dp_axes if len(dp_axes) > 1 else dp_axes[0])
+    rep = P()
+    return jax.shard_map(
+        per_shard, mesh=mesh,
+        in_specs=(rep, rep, batch_spec),
+        out_specs=(rep, rep, rep),
+        check_vma=False,
+        axis_names=set(dp_axes))

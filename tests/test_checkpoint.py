@@ -1,0 +1,65 @@
+"""Checkpoint: atomic roundtrip, crash-safety, resume, shape validation."""
+import json
+import shutil
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+
+
+def tree(key=0):
+    k = jax.random.PRNGKey(key)
+    return {"params": {"w": jax.random.normal(k, (4, 8)),
+                       "b": jnp.zeros((8,), jnp.bfloat16)},
+            "opt": {"m": jnp.ones((4, 8)), "step": jnp.asarray(7)}}
+
+
+def test_roundtrip(tmp_path):
+    t = tree()
+    ckpt.save(str(tmp_path), 10, t)
+    assert ckpt.latest_step(str(tmp_path)) == 10
+    example = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t)
+    back = ckpt.restore(str(tmp_path), 10, example)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_ignores_partial_saves(tmp_path):
+    t = tree()
+    ckpt.save(str(tmp_path), 5, t)
+    # a crashed save: directory without a manifest
+    (tmp_path / "step_9").mkdir()
+    (tmp_path / "step_12.tmp").mkdir()
+    assert ckpt.latest_step(str(tmp_path)) == 5
+
+
+def test_restore_validates_shapes(tmp_path):
+    t = tree()
+    ckpt.save(str(tmp_path), 1, t)
+    bad = jax.tree.map(lambda x: jax.ShapeDtypeStruct((3,) + x.shape,
+                                                      x.dtype), t)
+    with pytest.raises(ValueError):
+        ckpt.restore(str(tmp_path), 1, bad)
+
+
+def test_async_save(tmp_path):
+    t = tree()
+    th = ckpt.save(str(tmp_path), 3, t, blocking=False)
+    th.join()
+    assert ckpt.latest_step(str(tmp_path)) == 3
+
+
+def test_overwrite_same_step(tmp_path):
+    t1, t2 = tree(0), tree(1)
+    ckpt.save(str(tmp_path), 2, t1)
+    ckpt.save(str(tmp_path), 2, t2)
+    example = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t2)
+    back = ckpt.restore(str(tmp_path), 2, example)
+    np.testing.assert_array_equal(np.asarray(back["params"]["w"]),
+                                  np.asarray(t2["params"]["w"]))

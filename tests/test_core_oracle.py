@@ -1,0 +1,122 @@
+"""JAX simulator vs pure-Python oracle: exact-semantics equivalence.
+
+Small machines, every policy bundle, with and without THP, with segment
+frees.  Counters and placement arrays must match exactly; cycle totals to
+float32 rounding.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (CostConfig, MachineConfig, PolicyConfig,
+                        TieredMemSimulator, Trace, FIRST_TOUCH, INTERLEAVE,
+                        PT_BIND_ALL, PT_BIND_HIGH, PT_FOLLOW_DATA)
+from repro.core.ref import OracleSim
+
+EXACT_KEYS = ("l1_hits", "stlb_hits", "walks", "walk_mem_reads", "faults",
+              "slow_allocs", "data_migrations", "demotions",
+              "l4_mig_success", "l4_mig_already_dest", "l4_mig_in_dram",
+              "l4_mig_sibling_guard", "l4_mig_lock_skip",
+              "data_pages_dram", "data_pages_nvmm",
+              "leaf_pages_dram", "leaf_pages_nvmm", "oom_killed", "oom_step")
+CYCLE_KEYS = ("total_cycles", "walk_cycles", "stall_cycles",
+              "data_mem_cycles", "fault_cycles", "migration_cycles")
+
+
+def tiny_machine(page_order=0):
+    return MachineConfig(n_threads=4, dram_pages_per_node=600,
+                         nvmm_pages_per_node=2400, va_pages=1 << 12,
+                         page_order=page_order,
+                         l1_tlb_sets=4, l1_tlb_ways=2, stlb_sets=8,
+                         stlb_ways=4, pde_pwc_entries=4, pdpte_pwc_entries=2)
+
+
+def random_trace(mc, steps=160, seed=0, n_segs=2, free_at=None):
+    rng = np.random.default_rng(seed)
+    T = mc.n_threads
+    # mix of sequential faulting and random re-access
+    va = np.where(rng.random((steps, T)) < 0.5,
+                  rng.integers(0, mc.va_pages // 2, (steps, T)),
+                  rng.integers(0, mc.va_pages, (steps, T))).astype(np.int32)
+    va[rng.random((steps, T)) < 0.05] = -1       # idle slots
+    wr = rng.random((steps, T)) < 0.3
+    free_seg = np.full((steps,), -1, np.int32)
+    if free_at is not None:
+        free_seg[free_at] = 0
+    seg = np.zeros((mc.n_map,), np.int32)
+    seg[mc.n_map // 2:] = 1
+    llc = np.full((steps,), 0.4, np.float32)
+    return Trace(va=va, is_write=wr, free_seg=free_seg, llc=llc,
+                 seg_of_map=seg, name="rand")
+
+
+POLICIES = [
+    PolicyConfig(data_policy=FIRST_TOUCH, pt_policy=PT_FOLLOW_DATA,
+                 mig=False, autonuma=False),
+    PolicyConfig(data_policy=FIRST_TOUCH, pt_policy=PT_FOLLOW_DATA,
+                 mig=False, autonuma=True, autonuma_period=16,
+                 autonuma_budget=32),
+    PolicyConfig(data_policy=INTERLEAVE, pt_policy=PT_BIND_HIGH,
+                 mig=True, autonuma=True, autonuma_period=16,
+                 autonuma_budget=32),
+    PolicyConfig(data_policy=FIRST_TOUCH, pt_policy=PT_BIND_HIGH,
+                 mig=True, autonuma=True, autonuma_period=16,
+                 autonuma_budget=32),
+    PolicyConfig(data_policy=FIRST_TOUCH, pt_policy=PT_BIND_ALL,
+                 mig=False, autonuma=False),
+    PolicyConfig(data_policy=INTERLEAVE, pt_policy=PT_FOLLOW_DATA,
+                 mig=False, autonuma=True, autonuma_period=16,
+                 autonuma_budget=32, autonuma_exchange=False),
+]
+
+
+def _compare(mc, pc, trace):
+    cc = CostConfig()
+    jax_res = TieredMemSimulator(mc=mc, cc=cc, pc=pc).run(trace).summary()
+    oracle = OracleSim(mc, cc, pc)
+    oracle.run(trace)
+    ref = oracle.summary()
+    for k in EXACT_KEYS:
+        assert jax_res[k] == ref[k], \
+            f"{pc.label()}: {k}: jax={jax_res[k]} oracle={ref[k]}"
+    for k in CYCLE_KEYS:
+        np.testing.assert_allclose(jax_res[k], ref[k], rtol=1e-5,
+                                   err_msg=f"{pc.label()}: {k}")
+
+
+@pytest.mark.parametrize("pidx", range(len(POLICIES)))
+def test_oracle_equivalence(pidx):
+    mc = tiny_machine()
+    _compare(mc, POLICIES[pidx], random_trace(mc, seed=pidx))
+
+
+def test_oracle_equivalence_with_free():
+    mc = tiny_machine()
+    pc = POLICIES[3]
+    _compare(mc, pc, random_trace(mc, seed=42, free_at=100))
+
+
+def test_oracle_equivalence_thp():
+    mc = tiny_machine(page_order=9)
+    for pidx in (0, 3):
+        _compare(mc, POLICIES[pidx], random_trace(mc, seed=7 + pidx))
+
+
+def test_oracle_equivalence_memory_pressure():
+    # footprint ~2x DRAM so first-touch spills and AutoNUMA churns
+    mc = MachineConfig(n_threads=4, dram_pages_per_node=200,
+                       nvmm_pages_per_node=1600, va_pages=1 << 11,
+                       l1_tlb_sets=4, l1_tlb_ways=2, stlb_sets=8,
+                       stlb_ways=4, pde_pwc_entries=4, pdpte_pwc_entries=2)
+    for pidx in (1, 2, 3):
+        _compare(mc, POLICIES[pidx], random_trace(mc, seed=pidx, steps=256))
+
+
+def test_oracle_equivalence_radix6():
+    # scaled-radix machine used by the benchmark suite
+    mc = MachineConfig(n_threads=4, dram_pages_per_node=600,
+                       nvmm_pages_per_node=2400, va_pages=1 << 12,
+                       radix_bits=6,
+                       l1_tlb_sets=4, l1_tlb_ways=2, stlb_sets=8,
+                       stlb_ways=4, pde_pwc_entries=4, pdpte_pwc_entries=2)
+    for pidx in (2, 3):
+        _compare(mc, POLICIES[pidx], random_trace(mc, seed=20 + pidx))

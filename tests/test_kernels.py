@@ -1,0 +1,92 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.block_copy import block_copy_kernel
+from repro.kernels.paged_attention import paged_attention_kernel
+from repro.kernels.pt_walk import pt_walk_kernel
+
+RNG = np.random.default_rng(42)
+
+
+@pytest.mark.parametrize("B,KH,G,Dh,P,bs,NB", [
+    (1, 1, 1, 128, 8, 8, 2),
+    (2, 2, 4, 128, 16, 16, 4),
+    (3, 4, 2, 256, 32, 8, 5),
+    (2, 2, 8, 128, 16, 32, 3),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_attention_sweep(B, KH, G, Dh, P, bs, NB, dtype):
+    q = jnp.asarray(RNG.normal(size=(B, KH, G, Dh)), dtype)
+    kp = jnp.asarray(RNG.normal(size=(KH, P, bs, Dh)), dtype)
+    vp = jnp.asarray(RNG.normal(size=(KH, P, bs, Dh)), dtype)
+    tables = jnp.asarray(
+        RNG.choice(P, size=B * NB, replace=False).reshape(B, NB), jnp.int32)
+    lengths = jnp.asarray(RNG.integers(1, NB * bs + 1, B), jnp.int32)
+    got = paged_attention_kernel(q, kp, vp, tables, lengths, interpret=True)
+    want = ref.paged_attention_ref(q, kp, vp, tables, lengths)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("n_leaf,fanout,n", [
+    (4, 64, 256), (16, 64, 512), (8, 128, 1024)])
+def test_pt_walk_sweep(n_leaf, fanout, n):
+    upper = jnp.asarray(RNG.permutation(n_leaf), jnp.int32)
+    upper = upper.at[0].set(-1)                     # an unallocated leaf
+    ltier = jnp.asarray(RNG.integers(0, 2, n_leaf), jnp.int32)
+    lent = jnp.asarray(RNG.integers(0, 64, (n_leaf, fanout)), jnp.int32)
+    vb = jnp.asarray(RNG.integers(0, n_leaf * fanout, n), jnp.int32)
+    t, s = pt_walk_kernel(upper, ltier, lent, vb, interpret=True)
+    wt, ws = ref.pt_walk_ref(upper, ltier, lent, vb)
+    np.testing.assert_array_equal(np.asarray(t), np.asarray(wt))
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(ws))
+
+
+@pytest.mark.parametrize("P,bs,KH,Dh,M", [
+    (8, 8, 1, 128, 1), (16, 16, 2, 128, 5), (32, 8, 4, 256, 12)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_block_copy_sweep(P, bs, KH, Dh, M, dtype):
+    src = jnp.asarray(RNG.normal(size=(P, bs, KH, Dh)), dtype)
+    dst = jnp.asarray(RNG.normal(size=(P, bs, KH, Dh)), dtype)
+    srcs = RNG.choice(P, size=M, replace=False)
+    dsts = RNG.choice(P, size=M, replace=False)
+    ids = jnp.asarray(np.stack([srcs, dsts], 1), jnp.int32)
+    got = block_copy_kernel(src, dst, ids, interpret=True)
+    want = ref.block_copy_ref(src, dst, ids)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_paged_attention_matches_dense():
+    """Paged attention over a permuted pool == dense attention."""
+    B, KH, G, Dh, bs, NB = 2, 2, 2, 128, 8, 4
+    S = bs * NB
+    q = jnp.asarray(RNG.normal(size=(B, KH, G, Dh)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, KH, S, Dh)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, KH, S, Dh)), jnp.float32)
+    # scatter into pools
+    P = B * NB
+    perm = RNG.permutation(P)
+    tables = jnp.asarray(perm.reshape(B, NB), jnp.int32)
+    kp = jnp.zeros((KH, P, bs, Dh), jnp.float32)
+    vp = jnp.zeros((KH, P, bs, Dh), jnp.float32)
+    for b in range(B):
+        for j in range(NB):
+            kp = kp.at[:, perm[b * NB + j]].set(k[b, :, j * bs:(j + 1) * bs])
+            vp = vp.at[:, perm[b * NB + j]].set(v[b, :, j * bs:(j + 1) * bs])
+    lengths = jnp.asarray([S, S - 3], jnp.int32)
+    got = paged_attention_kernel(q, kp, vp, tables, lengths, interpret=True)
+    # dense reference
+    s = jnp.einsum("bkgd,bksd->bkgs", q, k) / np.sqrt(Dh)
+    mask = jnp.arange(S)[None, :] < lengths[:, None]
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    want = jnp.einsum("bkgs,bksd->bkgd", jax.nn.softmax(s, -1), v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)

@@ -1,0 +1,101 @@
+"""Launch-layer units: HLO collective parsing, analytic FLOPs, cell
+validity, and the checkpoint/restart fault-tolerance loop."""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro import configs
+from repro.configs.base import SHAPES, cell_is_valid
+from repro.launch.analysis import model_flops, parse_collectives
+
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+
+HLO = """
+  %ag = bf16[16,128]{1,0} all-gather(%x), replica_groups={{0,1,2,3}}, dimensions={0}
+  %ar.1 = f32[64]{0} all-reduce(%y), replica_groups={{0,1}}, to_apply=%sum
+  %cp = bf16[8,8]{1,0} collective-permute(%z), source_target_pairs={{0,1}}
+  %rs = (f32[32]{0}, f32[32]{0}) reduce-scatter(%a, %b), replica_groups={{0,1,2,3}}
+"""
+
+
+def test_parse_collectives():
+    out = parse_collectives(HLO)
+    assert out["all-gather"]["count"] == 1
+    assert out["all-gather"]["bytes"] == 16 * 128 * 2
+    # ring model: (g-1)/g of the buffer for g=4
+    assert abs(out["all-gather"]["traffic"]
+               - 16 * 128 * 2 * 0.75) < 1e-6
+    assert out["all-reduce"]["traffic"] == 2 * 64 * 4 * 0.5
+    assert out["collective-permute"]["traffic"] == 8 * 8 * 2
+    assert out["reduce-scatter"]["bytes"] == 2 * 32 * 4
+
+
+def test_model_flops_scaling():
+    cfg = configs.get_config("qwen2.5-14b")
+    train = model_flops(cfg, SHAPES["train_4k"])
+    prefill = model_flops(cfg, SHAPES["prefill_32k"])
+    decode = model_flops(cfg, SHAPES["decode_32k"])
+    # 6ND vs 2ND over the same token count
+    assert abs(train / prefill - 3.0) < 1e-6
+    assert decode == pytest.approx(2.0 * cfg.n_active_params() * 128)
+
+
+def test_cell_validity_matrix():
+    """The 40-cell matrix: 31 valid, 9 skipped per assignment."""
+    valid = skipped = 0
+    for arch_id in configs.ARCH_IDS:
+        cfg = configs.get_config(arch_id)
+        for shape in SHAPES.values():
+            ok, reason = cell_is_valid(cfg, shape)
+            if ok:
+                valid += 1
+            else:
+                skipped += 1
+                assert reason
+    assert valid == 31 and skipped == 9
+
+
+def test_moe_flops_use_active_params():
+    mav = configs.get_config("llama4-maverick-400b-a17b")
+    dense_equiv = model_flops(mav, SHAPES["train_4k"])
+    assert dense_equiv < 6.0 * mav.n_params() * 4096 * 256 / 10  # ~28x less
+
+
+@pytest.mark.slow
+def test_checkpoint_restart_fault_tolerance(tmp_path):
+    """Kill a training run mid-flight; the relaunch resumes from the last
+    complete checkpoint and finishes with the same step count."""
+    env = dict(os.environ, PYTHONPATH=SRC, JAX_PLATFORMS="cpu")
+    args = [sys.executable, "-m", "repro.launch.train",
+            "--arch", "qwen1.5-0.5b", "--reduced", "--steps", "12",
+            "--global-batch", "4", "--seq-len", "32",
+            "--ckpt-dir", str(tmp_path), "--ckpt-every", "4",
+            "--resume", "auto", "--log-every", "2"]
+    # run 1: killed after the first checkpoint lands
+    p = subprocess.Popen(args, env=env, stdout=subprocess.PIPE,
+                         stderr=subprocess.STDOUT, text=True)
+    import time
+    deadline = time.time() + 500
+    while time.time() < deadline:
+        from repro.checkpoint import ckpt as _c
+        if _c.latest_step(str(tmp_path)) is not None:
+            break
+        time.sleep(1)
+        if p.poll() is not None:
+            break
+    p.kill()
+    p.wait()
+    from repro.checkpoint import ckpt as _c
+    first = _c.latest_step(str(tmp_path))
+    assert first is not None and first >= 4
+
+    # run 2: resumes and completes
+    r = subprocess.run(args, env=env, capture_output=True, text=True,
+                       timeout=600)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert f"resumed from step" in r.stdout
+    assert _c.latest_step(str(tmp_path)) == 12

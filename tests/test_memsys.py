@@ -1,0 +1,115 @@
+"""Tiered paged-KV cache: correctness + Radiant invariants (property-based)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.memsys import tiered_kv as tkv
+
+G, KH, DH, BS = 2, 2, 8, 4
+
+
+def make_kv(n_hot=8, n_cold=32, n_seqs=4, max_seq=BS * tkv.FANOUT * 2):
+    return tkv.init(G, n_hot, n_cold, BS, KH, DH, n_seqs, max_seq,
+                    dtype=jnp.float32)
+
+
+def tok(val):
+    return jnp.full((G, KH, DH), val, jnp.float32)
+
+
+def test_append_gather_roundtrip():
+    kv = make_kv()
+    append = jax.jit(tkv.append_token)
+    vals = {0: [], 1: []}
+    for t in range(10):
+        for seq in (0, 1):
+            v = 1.0 + seq * 100 + t
+            kv = append(kv, jnp.asarray(seq), tok(v), tok(v * 2))
+            vals[seq].append(v)
+    for seq in (0, 1):
+        n_blocks = -(-len(vals[seq]) // BS)
+        k, v = tkv.gather_kv(kv, jnp.asarray(seq), n_blocks)
+        got = np.asarray(k)[0, :, 0, 0]
+        want = np.asarray(vals[seq] + [0.0] * (n_blocks * BS - len(vals[seq])))
+        np.testing.assert_allclose(got[:len(vals[seq])], want[:len(vals[seq])])
+
+
+def test_cold_fallback_when_hot_pool_full():
+    kv = make_kv(n_hot=2)
+    append = jax.jit(tkv.append_token)
+    for t in range(4 * BS):     # needs 4 blocks; only 2 hot
+        kv = append(kv, jnp.asarray(0), tok(float(t)), tok(float(t)))
+    tier, slot = tkv.lookup_blocks(kv, jnp.asarray(0), 4)
+    assert int(kv.stats[tkv.STAT_FALLBACK]) == 2
+    assert list(np.asarray(tier)) == [tkv.HOT, tkv.HOT, tkv.COLD, tkv.COLD]
+    # gather must still return the right data from both pools
+    k, _ = tkv.gather_kv(kv, jnp.asarray(0), 4)
+    np.testing.assert_allclose(np.asarray(k)[0, :4 * BS, 0, 0],
+                               np.arange(4 * BS, dtype=np.float32))
+
+
+def test_migrate_roundtrip_and_invariant():
+    kv = make_kv()
+    append = jax.jit(tkv.append_token)
+    for t in range(2 * BS):
+        kv = append(kv, jnp.asarray(0), tok(float(t)), tok(float(t)))
+    k0, _ = tkv.gather_kv(kv, jnp.asarray(0), 2)
+    kv = tkv.migrate_sequence(kv, jnp.asarray(0), tkv.COLD, 8)
+    assert int(tkv.table_invariant_violations(kv)) == 0
+    tier, _ = tkv.lookup_blocks(kv, jnp.asarray(0), 2)
+    assert all(np.asarray(tier) == tkv.COLD)
+    assert int(kv.leaf_tier[kv.upper[0, 0]]) == tkv.COLD  # Alg.1: leaf follows
+    kv = tkv.migrate_sequence(kv, jnp.asarray(0), tkv.HOT, 8)
+    assert int(tkv.table_invariant_violations(kv)) == 0
+    assert int(kv.leaf_tier[kv.upper[0, 0]]) == tkv.HOT
+    k1, _ = tkv.gather_kv(kv, jnp.asarray(0), 2)
+    np.testing.assert_allclose(np.asarray(k0), np.asarray(k1))
+
+
+def test_immobile_tables_violate_invariant():
+    kv = make_kv()
+    append = jax.jit(tkv.append_token)
+    for t in range(BS):
+        kv = append(kv, jnp.asarray(0), tok(1.0), tok(1.0))
+    kv = tkv.migrate_sequence(kv, jnp.asarray(0), tkv.COLD, 8,
+                              trigger_leaf=False)
+    assert int(tkv.table_invariant_violations(kv)) > 0
+
+
+MAXB = 64          # covers every block a test sequence can grow to
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 2),          # seq id
+                          st.sampled_from(["append", "demote", "promote"])),
+                min_size=1, max_size=20))
+def test_property_invariant_and_freelists(ops):
+    kv = make_kv(n_hot=6, n_cold=64, n_seqs=3)
+    append = jax.jit(tkv.append_token)
+    mig = jax.jit(tkv.migrate_sequence,
+                  static_argnames=("to_tier", "max_blocks", "trigger_leaf"))
+    for seq, op in ops:
+        if op == "append":
+            for _ in range(3):
+                kv = append(kv, jnp.asarray(seq), tok(1.0), tok(1.0))
+        elif op == "demote":
+            kv = mig(kv, jnp.asarray(seq), tkv.COLD, MAXB)
+        else:
+            kv = mig(kv, jnp.asarray(seq), tkv.HOT, MAXB)
+    # Radiant invariant: leaf tier agrees with children everywhere
+    assert int(tkv.table_invariant_violations(kv)) == 0
+    # allocator sanity: free tops within bounds, no double allocation
+    n_hot = kv.hot_k.shape[1]
+    tiers, slots = [], []
+    for s in range(3):
+        t, sl = tkv.lookup_blocks(kv, jnp.asarray(s), MAXB)
+        t, sl = np.asarray(t), np.asarray(sl)
+        for ti, si in zip(t, sl):
+            if ti >= 0:
+                tiers.append(ti)
+                slots.append((ti, si))
+    assert len(set(slots)) == len(slots), "double-allocated block slot"
+    n_hot_used = sum(1 for t, _ in slots if t == tkv.HOT)
+    assert n_hot_used + int(kv.hot_free_top) == n_hot
