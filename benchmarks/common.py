@@ -22,7 +22,7 @@ import numpy as np
 from repro.core import (CostConfig, MachineConfig, PolicyConfig,
                         TieredMemSimulator, Trace, benchmark_machine,
                         bhi, bhi_mig, bind_all, linux_default, pad_trace,
-                        workloads)
+                        sweep, workloads)
 
 ART = Path(__file__).resolve().parent.parent / "artifacts" / "bench"
 
@@ -51,6 +51,23 @@ def run(mc: MachineConfig, pc: PolicyConfig, trace: Trace):
     t0 = time.time()
     res = TieredMemSimulator(mc=mc, pc=pc).run(trace)
     return res, time.time() - t0
+
+
+def run_sweep(mc: MachineConfig, policies, traces, cc: Optional[CostConfig] = None):
+    """Run a figure's whole policy (× workload) grid as ONE batched scan.
+
+    Wraps ``repro.core.sweep``: a single compile per trace shape and a
+    single device program replace the former per-policy Python loop.
+    Returns (results, per_lane_seconds) with results shaped like sweep()'s
+    output — ``[policy]`` for a single trace, ``[trace][policy]`` for a
+    list — and the wall-clock evenly attributed to lanes for the CSV rows.
+    """
+    t0 = time.time()
+    results = sweep(mc, cc if cc is not None else CostConfig(), policies,
+                    traces)
+    n_traces = 1 if isinstance(traces, Trace) else len(traces)
+    lanes = max(len(policies) * n_traces, 1)
+    return results, (time.time() - t0) / lanes
 
 
 def phase_metrics(res, trace: Trace) -> Dict[str, float]:

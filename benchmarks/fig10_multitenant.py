@@ -20,13 +20,16 @@ def main(quick: bool = False):
     pad = max(t.n_steps for t in traces.values())
     traces = {k: pad_trace(t, pad) for k, t in traces.items()}
 
+    policies = [("autonuma", linux_default()), ("BHi+Mig", bhi_mig())]
+    # multi-tenant traces carry per-trace segment maps; the sweep engine
+    # batches those per lane alongside the policies
+    grid, secs = common.run_sweep(mc, [pc for _, pc in policies],
+                                  list(traces.values()))
     results = {}
     rows = []
-    for wname, trace in traces.items():
+    for (wname, trace), lane_row in zip(traces.items(), grid):
         base = None
-        for pname, pc in [("autonuma", linux_default()),
-                          ("BHi+Mig", bhi_mig())]:
-            res, secs = common.run(mc, pc, trace)
+        for (pname, _), res in zip(policies, lane_row):
             m = common.phase_metrics(res, trace)
             if base is None:
                 base = m

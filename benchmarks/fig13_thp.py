@@ -18,11 +18,12 @@ def main(quick: bool = False):
     policies = [("thp-base", linux_default(autonuma=False)),
                 ("thp-BHi", bhi(autonuma=False)),
                 ("thp-BHi+Mig", bhi_mig(autonuma=False))]
+    grid, secs = common.run_sweep(mc, [pc for _, pc in policies],
+                                  list(traces.values()))
     results, rows = {}, []
-    for wname, trace in traces.items():
+    for (wname, trace), lane_row in zip(traces.items(), grid):
         base = None
-        for pname, pc in policies:
-            res, secs = common.run(mc, pc, trace)
+        for (pname, _), res in zip(policies, lane_row):
             m = common.phase_metrics(res, trace)
             if base is None:
                 base = m

@@ -10,20 +10,20 @@ import numpy as np
 
 from . import common
 from repro.core import (INTERLEAVE, PT_BIND_HIGH, PT_FOLLOW_DATA,
-                        PolicyConfig, TieredMemSimulator, benchmark_machine,
-                        workloads)
+                        PolicyConfig, benchmark_machine, workloads)
 
 
 def main(quick: bool = False):
     mc = benchmark_machine()
     tr = workloads.kv_store(mc, int(common.FOOTPRINT * 0.7) // mc.n_threads
                             * mc.n_threads, run_steps=64, name="memcached")
+    names_pts = [("interleave", PT_FOLLOW_DATA),
+                 ("interleave+BHi", PT_BIND_HIGH)]
+    policies = [PolicyConfig(data_policy=INTERLEAVE, pt_policy=pt,
+                             autonuma=False) for _, pt in names_pts]
+    sweep_res, secs = common.run_sweep(mc, policies, tr)
     results, rows = {}, []
-    for pname, pt in [("interleave", PT_FOLLOW_DATA),
-                      ("interleave+BHi", PT_BIND_HIGH)]:
-        pc = PolicyConfig(data_policy=INTERLEAVE, pt_policy=pt,
-                          autonuma=False)
-        res, secs = common.run(mc, pc, tr)
+    for (pname, _), res in zip(names_pts, sweep_res):
         st = res.final_state
         leaf = np.asarray(st.leaf_node)
         mid = np.asarray(st.mid_node)

@@ -15,10 +15,11 @@ def main(quick: bool = False):
     mc = benchmark_machine()
     tr = workloads.kv_store(mc, common.FOOTPRINT, run_steps=4096,
                             seed=10, name="redis")
+    pairs = [("first-touch", linux_default()),
+             ("Radiant(BHi+Mig)", bhi_mig())]
+    sweep_res, secs = common.run_sweep(mc, [pc for _, pc in pairs], tr)
     results, rows = {}, []
-    for pname, pc in [("first-touch", linux_default()),
-                      ("Radiant(BHi+Mig)", bhi_mig())]:
-        res, secs = common.run(mc, pc, tr)
+    for (pname, _), res in zip(pairs, sweep_res):
         tl = res.timeline
         win = 256
         wc = np.diff(tl["walk_cycles"][::win])

@@ -21,11 +21,12 @@ def main(quick: bool = False):
                              reclaimable_frac=0.003)
     tr = workloads.kv_store(mc, common.FOOTPRINT, run_steps=64,
                             name="memcached")
+    pairs = [("first-touch", linux_default(autonuma=False)),
+             ("bind-all-PT", bind_all(autonuma=False)),
+             ("BHi", bhi(autonuma=False))]
+    sweep_res, secs = common.run_sweep(mc, [pc for _, pc in pairs], tr)
     results, rows = {}, []
-    for pname, pc in [("first-touch", linux_default(autonuma=False)),
-                      ("bind-all-PT", bind_all(autonuma=False)),
-                      ("BHi", bhi(autonuma=False))]:
-        res, secs = common.run(mc, pc, tr)
+    for (pname, _), res in zip(pairs, sweep_res):
         m = res.summary()
         results[pname] = m
         nvmm_free = None

@@ -26,6 +26,11 @@ def main(quick: bool = False):
         return common.geomean_improvement(
             [data[w][policy]["improv"][key] for w in data])
 
+    def regenerate(fig):
+        """Produce a missing artifact by running its (sweep-batched) figure."""
+        import importlib
+        importlib.import_module(f"benchmarks.{fig}").main(quick=quick)
+
     specs = [
         ("fullsystem/BHi", "fig9_fullsystem", "BHi"),
         ("fullsystem/BHi+Mig", "fig9_fullsystem", "BHi+Mig"),
@@ -34,9 +39,11 @@ def main(quick: bool = False):
         ("thp/BHi", "fig13_thp", "thp-BHi"),
     ]
     for label, fig, policy in specs:
+        if not (art / f"{fig}.json").exists():
+            regenerate(fig)
         try:
             ours = {k: geo(fig, policy, k) for k in ("total", "walk", "stall")}
-        except FileNotFoundError:
+        except (FileNotFoundError, KeyError):
             continue
         summary[label] = {"ours": ours, "paper": PAPER[label]}
         p = PAPER[label]

@@ -19,8 +19,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from .config import (CostConfig, MachineConfig, FIRST_TOUCH, INTERLEAVE,
-                     PT_BIND_ALL, PT_BIND_HIGH)
+from .config import (MachineConfig, INTERLEAVE, PT_BIND_ALL, PT_BIND_HIGH)
 
 I32 = jnp.int32
 
@@ -92,27 +91,29 @@ def alloc_one(node_free: jax.Array, node_reclaimable: jax.Array,
     return node, slow, node_free - dec, node_reclaimable - dec_rec, ok
 
 
-def data_prefs_for(policy: str, thread: jax.Array, n_threads: int,
+def data_prefs_for(data_policy: jax.Array, thread: jax.Array, n_threads: int,
                    interleave_ptr: jax.Array) -> jax.Array:
-    if policy == INTERLEAVE:
-        return interleave_prefs(interleave_ptr)
-    if policy == FIRST_TOUCH:
-        return first_touch_prefs(thread, n_threads)
-    raise ValueError(f"unknown data policy {policy!r}")
+    """Zonelist for a data-page allocation.  ``data_policy`` may be a traced
+    int32 policy code (a vmap policy sweep), so both orders are computed and
+    selected."""
+    interleave = jnp.asarray(data_policy) == INTERLEAVE
+    return jnp.where(interleave, interleave_prefs(interleave_ptr),
+                     first_touch_prefs(thread, n_threads))
 
 
-def pt_prefs_for(pt_policy: str, level_is_upper: bool, thread: jax.Array,
+def pt_prefs_for(pt_policy: jax.Array, level_is_upper: bool, thread: jax.Array,
                  n_threads: int, data_prefs: jax.Array,
-                 thp: bool) -> Tuple[jax.Array, bool]:
+                 thp: bool) -> Tuple[jax.Array, jax.Array]:
     """Preference order for a PT page allocation.
 
-    Returns (prefs, ignore_wm).  ``level_is_upper`` marks root/top/mid pages
-    (plus the leaf under THP, where the PMD *is* the leaf and BHi binds it —
-    paper section 6.6).
+    Returns (prefs, ignore_wm); ``pt_policy`` may be traced, so ``ignore_wm``
+    is a traced bool.  ``level_is_upper`` marks root/top/mid pages (plus the
+    leaf under THP, where the PMD *is* the leaf and BHi binds it — paper
+    section 6.6); it is static because each walk level is a separate call.
     """
-    if pt_policy == PT_BIND_ALL:
-        return dram_prefs(thread, n_threads), True
-    if pt_policy == PT_BIND_HIGH and (level_is_upper or thp):
-        return dram_prefs(thread, n_threads), True
+    pt_policy = jnp.asarray(pt_policy)
+    bound = (pt_policy == PT_BIND_ALL) | \
+        ((pt_policy == PT_BIND_HIGH) & (level_is_upper or thp))
     # Linux default: PT pages follow the data-page policy (paper section 3.2).
-    return data_prefs, False
+    prefs = jnp.where(bound, dram_prefs(thread, n_threads), data_prefs)
+    return prefs, bound

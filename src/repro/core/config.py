@@ -10,20 +10,36 @@ seconds on CPU while preserving the ratios that drive the paper's results
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Tuple, Union
+
+import jax
 
 N_NODES = 4
 DRAM_NODES = (0, 1)
 NVMM_NODES = (2, 3)
 
+# Policies are integer codes so a PolicyConfig can hold either plain Python
+# ints (single run) or traced/stacked int32 arrays (a vmap policy sweep —
+# see core.sweep).  The data-policy and PT-policy namespaces are disjoint
+# so an accidental cross-comparison can never be true.
+
 # Data-page placement policies (paper section 2.3 / 6.1).
-FIRST_TOUCH = "first_touch"
-INTERLEAVE = "interleave"
+FIRST_TOUCH = 0
+INTERLEAVE = 1
 
 # Page-table placement policies (paper sections 3.5 / 4.2).
-PT_FOLLOW_DATA = "follow_data"   # Linux default: same policy as data pages
-PT_BIND_ALL = "bind_all"         # LKML patch [36]: whole page table in DRAM
-PT_BIND_HIGH = "bind_high"       # Radiant BHi: L1-L3 in DRAM, L4 follows data
+PT_FOLLOW_DATA = 10  # Linux default: same policy as data pages
+PT_BIND_ALL = 11     # LKML patch [36]: whole page table in DRAM
+PT_BIND_HIGH = 12    # Radiant BHi: L1-L3 in DRAM, L4 follows data
+
+# Legacy string spellings still accepted by PolicyConfig and kept for
+# display purposes.
+DATA_POLICY_NAMES = {FIRST_TOUCH: "first_touch", INTERLEAVE: "interleave"}
+PT_POLICY_NAMES = {PT_FOLLOW_DATA: "follow_data", PT_BIND_ALL: "bind_all",
+                   PT_BIND_HIGH: "bind_high"}
+_POLICY_CODES = {name: code
+                 for names in (DATA_POLICY_NAMES, PT_POLICY_NAMES)
+                 for code, name in names.items()}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -109,6 +125,10 @@ class CostConfig:
     the 3x NVMM:DRAM read ratio ([38], paper section 1); write latency on
     Optane is worse and modeled at 4x.  Everything else is standard x86
     folklore and only shifts absolute numbers, not the policy deltas.
+
+    Registered as a pytree with every field a leaf: a CostConfig enters the
+    compiled simulator as traced scalars (so cost changes never recompile)
+    and ``core.sweep`` may stack several CostConfigs into one batched run.
     """
 
     dram_read: int = 250
@@ -151,19 +171,43 @@ class CostConfig:
 
 @dataclasses.dataclass(frozen=True)
 class PolicyConfig:
-    """Which paper technique is active (Table 3 conventions)."""
+    """Which paper technique is active (Table 3 conventions).
 
-    data_policy: str = FIRST_TOUCH     # first_touch | interleave
-    pt_policy: str = PT_FOLLOW_DATA    # follow_data | bind_all | bind_high
-    mig: bool = False                  # Radiant "Mig": Algorithm-1 L4 migration
-    autonuma: bool = True              # data-page balancing (migration source)
+    Registered as a pytree with every field a leaf, so a PolicyConfig can be
+    swept: ``core.sweep`` stacks N configs into one whose leaves are
+    ``int32[N]`` / ``bool[N]`` arrays and vmaps the simulator step over them.
+    Two knobs stay effectively static per compile — ``autonuma_period``
+    (scan-step schedule, precomputed host-side) and ``autonuma_budget``
+    (bounds the ``top_k`` shape) — but both live outside the compiled step,
+    so they are ordinary leaves here.
+    """
+
+    data_policy: Union[int, jax.Array] = FIRST_TOUCH   # FIRST_TOUCH | INTERLEAVE
+    pt_policy: Union[int, jax.Array] = PT_FOLLOW_DATA  # PT_FOLLOW_DATA | PT_BIND_ALL | PT_BIND_HIGH
+    mig: Union[bool, jax.Array] = False     # Radiant "Mig": Algorithm-1 L4 migration
+    autonuma: Union[bool, jax.Array] = True  # data-page balancing (migration source)
 
     # AutoNUMA-ish scanner.  Threshold 1 = migrate-on-touch, matching NUMA
     # hint-fault behavior; the budget bounds per-scan migrate_pages batches.
     autonuma_period: int = 512         # steps between scans
     autonuma_budget: int = 256         # max data-page promotions per scan
-    autonuma_threshold: int = 1        # min recent accesses to be "hot"
-    autonuma_exchange: bool = True     # demote cold DRAM pages to make room
+    autonuma_threshold: Union[int, jax.Array] = 1   # min recent accesses to be "hot"
+    autonuma_exchange: Union[bool, jax.Array] = True  # demote cold DRAM pages
+
+    def __post_init__(self):
+        # Normalize legacy string spellings and validate concrete codes;
+        # traced/stacked array leaves (pytree unflatten, sweeps) pass
+        # through untouched.
+        for f, valid in (("data_policy", DATA_POLICY_NAMES),
+                         ("pt_policy", PT_POLICY_NAMES)):
+            v = getattr(self, f)
+            if isinstance(v, str):
+                if v not in _POLICY_CODES or _POLICY_CODES[v] not in valid:
+                    raise ValueError(f"unknown {f} {v!r}")
+                object.__setattr__(self, f, _POLICY_CODES[v])
+            elif isinstance(v, int) and v not in valid:
+                raise ValueError(
+                    f"unknown {f} code {v}; valid: {dict(valid)}")
 
     def label(self) -> str:
         bits = []
@@ -177,6 +221,15 @@ class PolicyConfig:
         if not self.autonuma:
             bits.append("noAutoNUMA")
         return "+".join(bits)
+
+
+_COST_FIELDS = tuple(f.name for f in dataclasses.fields(CostConfig))
+jax.tree_util.register_dataclass(CostConfig, data_fields=_COST_FIELDS,
+                                 meta_fields=())
+
+_POLICY_FIELDS = tuple(f.name for f in dataclasses.fields(PolicyConfig))
+jax.tree_util.register_dataclass(PolicyConfig, data_fields=_POLICY_FIELDS,
+                                 meta_fields=())
 
 
 def benchmark_machine(thp: bool = False, n_threads: int = 32) -> MachineConfig:

@@ -66,15 +66,24 @@ def _rank_key(count: jax.Array, idx_bits: int) -> jax.Array:
 
 
 def autonuma_scan(st: SimState, mc: MachineConfig, cc: CostConfig,
-                  pc: PolicyConfig, wm: jax.Array) -> Tuple[SimState, jax.Array]:
+                  pc: PolicyConfig, wm: jax.Array,
+                  budget: int) -> Tuple[SimState, jax.Array]:
     """One AutoNUMA scan + (optionally) Algorithm-1 triggers.
 
     Returns the new state and the total migration cycles of this scan (the
     caller spreads them over threads: the migration daemon steals CPU time).
+
+    ``budget`` is the static upper bound on candidates (it shapes the
+    ``top_k`` calls); the PolicyConfig knobs — ``autonuma`` on/off,
+    ``autonuma_budget``, threshold, exchange, ``mig`` — may all be traced
+    scalars (a vmap policy sweep), so they gate through masks: a disabled
+    lane's scan is a bit-exact no-op rather than a skipped branch.
     """
     n_map = st.data_node.shape[0]
-    B = min(pc.autonuma_budget, n_map)
+    B = min(int(budget), n_map)
     idx_bits = max(n_map - 1, 1).bit_length()
+    enabled = jnp.asarray(pc.autonuma) & ~st.oom_killed
+    budget_t = jnp.minimum(jnp.asarray(pc.autonuma_budget, I32), n_map)
 
     on_nvmm = (st.data_node >= 2)
     hot_count = jnp.where(on_nvmm & (st.access_recent >= pc.autonuma_threshold),
@@ -82,7 +91,7 @@ def autonuma_scan(st: SimState, mc: MachineConfig, cc: CostConfig,
     hot_key = jnp.where(hot_count > 0, _rank_key(hot_count, idx_bits), -1)
     _, hot_pages = jax.lax.top_k(hot_key, B)
     hot_valid = jnp.take(hot_key, hot_pages) > 0
-    n_hot = jnp.sum(hot_valid.astype(I32))
+    n_hot = jnp.minimum(jnp.sum(hot_valid.astype(I32)), budget_t)
 
     # Cold DRAM victims (exchange mode only).
     on_dram = is_dram(st.data_node)
@@ -95,14 +104,16 @@ def autonuma_scan(st: SimState, mc: MachineConfig, cc: CostConfig,
     excess1 = jnp.maximum(st.node_free[1] - wm[1], 0)
     dram_excess = excess0 + excess1
 
-    n_promote_want = jnp.minimum(n_hot, B)
+    n_promote_want = jnp.minimum(n_hot, budget_t)
     need_demote = jnp.maximum(n_promote_want - dram_excess, 0)
-    n_victims = jnp.sum(cold_valid.astype(I32))
+    n_victims = jnp.minimum(jnp.sum(cold_valid.astype(I32)), budget_t)
     nvmm_room = jnp.maximum(st.node_free[2], 0) + jnp.maximum(st.node_free[3], 0)
-    n_demote = jnp.where(pc.autonuma_exchange,
+    n_demote = jnp.where(enabled & jnp.asarray(pc.autonuma_exchange),
                          jnp.minimum(jnp.minimum(need_demote, n_victims),
                                      nvmm_room), 0)
-    n_promote = jnp.minimum(n_promote_want, dram_excess + n_demote)
+    n_promote = jnp.where(enabled,
+                          jnp.minimum(n_promote_want, dram_excess + n_demote),
+                          0)
 
     # ---- apply demotions ---------------------------------------------------
     k = jnp.arange(B, dtype=I32)
@@ -164,16 +175,19 @@ def autonuma_scan(st: SimState, mc: MachineConfig, cc: CostConfig,
         st, data_node=data_node, leaf_dram_children=ldc,
         node_free=st.node_free + free_delta, l1_tlb=l1_tlb, stlb=stlb,
         counters=counters,
-        access_recent=st.access_recent // 2)  # hotness decay after the scan
+        # hotness decay after the scan (disabled lanes keep their counts)
+        access_recent=jnp.where(enabled, st.access_recent // 2,
+                                st.access_recent))
 
     # ---- Algorithm-1 triggers ------------------------------------------------
-    if pc.mig:
-        trig_pages = jnp.concatenate([dem_pages, pro_pages])
-        trig_dest = jnp.concatenate([dem_dest, pro_dest])
-        trig_mask = jnp.concatenate([dem_mask, pro_mask])
-        st, l4_cost = migrate_leaf_batch(st, mc, cc, trig_pages, trig_dest,
-                                         trig_mask)
-        mig_cost = mig_cost + l4_cost
+    # Masking the trigger batch with the (possibly traced) ``mig`` flag makes
+    # the whole Algorithm-1 pass a no-op for non-Mig lanes of a sweep.
+    trig_pages = jnp.concatenate([dem_pages, pro_pages])
+    trig_dest = jnp.concatenate([dem_dest, pro_dest])
+    trig_mask = jnp.concatenate([dem_mask, pro_mask]) & jnp.asarray(pc.mig)
+    st, l4_cost = migrate_leaf_batch(st, mc, cc, trig_pages, trig_dest,
+                                     trig_mask)
+    mig_cost = mig_cost + l4_cost
     return st, mig_cost
 
 

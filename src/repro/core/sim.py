@@ -21,9 +21,15 @@ pipeline fully (the PMH serializes translations, paper section 6.7:
 ``walk_active/walk_pending -> stalls_mem_any``), data misses are partially
 hidden by out-of-order execution.
 
-Compiled artifacts are cached per (machine, cost, policy, trace-shape) so a
-benchmark sweeping policies over padded same-shape traces compiles each
-policy exactly once.
+Policy and cost knobs enter the compiled step as *traced pytree leaves*
+(``PolicyConfig``/``CostConfig`` are registered dataclasses): the step is
+policy-generic and vmap-able over a leading policy axis.  ``core.sweep``
+uses that to run N policies (and M same-shape traces) in ONE compiled
+``lax.scan``; the sequential path here shares the same compiled artifact
+across every policy of equal trace shape.  Step-schedule predicates that
+must stay un-batched for ``lax.cond`` to survive vmap — "a segment frees
+this step", "the AutoNUMA scan fires", "some thread faults" — are
+precomputed host-side from the trace (see :func:`fault_step_mask`).
 """
 from __future__ import annotations
 
@@ -102,6 +108,44 @@ def pad_trace(tr: Trace, n_steps: int) -> Trace:
         llc=np.concatenate([tr.llc, np.zeros((pad,), np.float32)]))
 
 
+def fault_step_mask(tr: Trace, mc: MachineConfig) -> np.ndarray:
+    """bool[steps]: does ANY thread touch an unmapped page at step s?
+
+    Mapped-ness is policy-independent (placement differs across policies,
+    existence does not), so this is derivable from the trace alone and can
+    drive an un-batched ``lax.cond`` around the sequential fault loop even
+    when the step itself is vmapped over policies.  For a simulation resumed
+    from a pre-populated state this is an over-approximation (the fault loop
+    runs and no-ops), never an under-approximation.
+    """
+    shift, n_map = mc.map_shift, mc.n_map
+    va = np.asarray(tr.va)
+    seg = np.asarray(tr.seg_of_map)
+    free_seg = np.asarray(tr.free_seg)
+    mapped = np.zeros(n_map, bool)
+    out = np.zeros(va.shape[0], bool)
+    for s in range(va.shape[0]):
+        if free_seg[s] >= 0:
+            mapped[seg == free_seg[s]] = False
+        row = va[s]
+        act = row >= 0
+        if not act.any():
+            continue
+        m = np.clip(row[act].astype(np.int64) >> shift, 0, n_map - 1)
+        miss = ~mapped[m]
+        if miss.any():
+            out[s] = True
+            mapped[m[miss]] = True
+    return out
+
+
+def scan_step_mask(n_steps: int, period: int, enabled: bool = True,
+                   start_step: int = 0) -> np.ndarray:
+    """bool[steps]: does the periodic AutoNUMA scan fire at step s?"""
+    s = np.arange(start_step, start_step + n_steps)
+    return (s > 0) & (s % max(int(period), 1) == 0) & bool(enabled)
+
+
 @dataclasses.dataclass
 class RunResult:
     final_state: SimState          # host-side pytree of numpy arrays
@@ -158,7 +202,15 @@ TIMELINE_KEYS = ("total_cycles", "walk_cycles", "stall_cycles", "faults",
                  "data_mem_cycles", "fault_cycles", "l1_hits", "stlb_hits")
 
 
-def _build_step(mc: MachineConfig, cc: CostConfig, pc: PolicyConfig):
+def _build_step(mc: MachineConfig, budget: int):
+    """Build the policy-generic simulator step.
+
+    Only MachineConfig shapes and the AutoNUMA candidate bound ``budget``
+    are baked into the compile; every CostConfig/PolicyConfig value arrives
+    per call as a traced leaf of the ``cc``/``pc`` pytrees.  One compiled
+    step therefore serves every policy bundle — and vmaps over a leading
+    policy axis for batched sweeps (``core.sweep``).
+    """
     T = mc.n_threads
     shift = mc.map_shift
     n_map = mc.n_map
@@ -166,14 +218,19 @@ def _build_step(mc: MachineConfig, cc: CostConfig, pc: PolicyConfig):
     thp = mc.page_order > 0
     wm = alloc_mod.watermark_pages(mc)
 
-    def read_lat(node):
-        return jnp.where(is_dram(node), cc.dram_read, cc.nvmm_read).astype(F32)
+    def f32(v):
+        return jnp.asarray(v, F32)
 
-    def write_lat(node):
-        return jnp.where(is_dram(node), cc.dram_write, cc.nvmm_write).astype(F32)
+    def read_lat(cc, node):
+        return jnp.where(is_dram(node), f32(cc.dram_read),
+                         f32(cc.nvmm_read))
+
+    def write_lat(cc, node):
+        return jnp.where(is_dram(node), f32(cc.dram_write),
+                         f32(cc.nvmm_write))
 
     # ------------------------------ phase A --------------------------------
-    def phase_a(st: SimState, va_row, w_row, llc_rate):
+    def phase_a(st: SimState, cc: CostConfig, va_row, w_row, llc_rate):
         m = jnp.clip(jnp.where(va_row >= 0, va_row >> shift, 0), 0, n_map - 1)
         tid = jnp.arange(T, dtype=I32)
         mapped = jnp.take(st.data_node, m) >= 0
@@ -198,17 +255,18 @@ def _build_step(mc: MachineConfig, cc: CostConfig, pc: PolicyConfig):
         up1_llc = bern(cc.upper_llc_hit, 2, mid_id, now, tid)
         up2_llc = bern(cc.upper_llc_hit, 3, top_id, now, tid)
 
-        leaf_read = jnp.where(leaf_llc, float(cc.llc_hit), read_lat(leaf_n))
+        leaf_read = jnp.where(leaf_llc, f32(cc.llc_hit), read_lat(cc, leaf_n))
         mid_read = jnp.where(pde_hit, 0.0,
-                             jnp.where(up1_llc, float(cc.llc_hit), read_lat(mid_n)))
+                             jnp.where(up1_llc, f32(cc.llc_hit),
+                                       read_lat(cc, mid_n)))
         full = ~pde_hit & ~pdpte_hit
         if thp:
             top_read = jnp.zeros((T,), F32)
         else:
             top_read = jnp.where(full,
-                                 jnp.where(up2_llc, float(cc.llc_hit),
-                                           read_lat(top_n)), 0.0)
-        root_read = jnp.where(full, float(cc.llc_hit), 0.0)
+                                 jnp.where(up2_llc, f32(cc.llc_hit),
+                                           read_lat(cc, top_n)), 0.0)
+        root_read = jnp.where(full, f32(cc.llc_hit), 0.0)
         walk_cost = jnp.where(walkn, leaf_read + mid_read + top_read + root_read, 0.0)
         walk_reads = jnp.where(
             walkn,
@@ -218,12 +276,13 @@ def _build_step(mc: MachineConfig, cc: CostConfig, pc: PolicyConfig):
 
         data_n = jnp.take(st.data_node, m)
         data_llc = bern(llc_rate, 4, m, now, tid)
-        mem_lat = jnp.where(w_row, write_lat(data_n), read_lat(data_n))
-        data_cost = jnp.where(vec, jnp.where(data_llc, float(cc.llc_hit), mem_lat), 0.0)
+        mem_lat = jnp.where(w_row, write_lat(cc, data_n), read_lat(cc, data_n))
+        data_cost = jnp.where(vec, jnp.where(data_llc, f32(cc.llc_hit),
+                                             mem_lat), 0.0)
 
-        tlb_penalty = jnp.where(vec & ~hit1, float(cc.stlb_hit), 0.0)
-        stall = walk_cost + cc.data_stall_frac * data_cost
-        total = jnp.where(vec, float(cc.cpu_work), 0.0) + tlb_penalty + stall
+        tlb_penalty = jnp.where(vec & ~hit1, f32(cc.stlb_hit), 0.0)
+        stall = walk_cost + f32(cc.data_stall_frac) * data_cost
+        total = jnp.where(vec, f32(cc.cpu_work), 0.0) + tlb_penalty + stall
 
         l1_tlb = tlbs.update(st.l1_tlb, m, way1, now, vec)
         stlb = tlbs.update(st.stlb, m, way2, now, vec & ~hit1)
@@ -250,8 +309,8 @@ def _build_step(mc: MachineConfig, cc: CostConfig, pc: PolicyConfig):
         return st, active & ~mapped
 
     # ------------------------------ phase B --------------------------------
-    def _alloc_pt_level(st: SimState, t, node_arr, idx, is_upper: bool,
-                        cost_acc):
+    def _alloc_pt_level(st: SimState, cc: CostConfig, pc: PolicyConfig, t,
+                        node_arr, idx, is_upper: bool, cost_acc):
         missing = node_arr[idx] < 0
         # recompute per allocation: the interleave cursor advances with
         # every page handed out (PT pages consume round-robin slots too,
@@ -261,26 +320,29 @@ def _build_step(mc: MachineConfig, cc: CostConfig, pc: PolicyConfig):
         prefs, ignore_wm = alloc_mod.pt_prefs_for(
             pc.pt_policy, is_upper, t, T, data_prefs, thp)
         node, slow, nf, nr, ok = alloc_mod.alloc_one(
-            st.node_free, st.node_reclaimable, prefs, wm,
-            jnp.asarray(ignore_wm))
-        if pc.pt_policy == PT_BIND_HIGH and (is_upper or thp):
+            st.node_free, st.node_reclaimable, prefs, wm, ignore_wm)
+        if is_upper or thp:
+            # BHi falls back to the data policy when DRAM is exhausted.
+            # Both allocations are computed and the fallback selected per
+            # (possibly vmapped) lane so the branch stays traced.
             node2, slow2, nf2, nr2, ok2 = alloc_mod.alloc_one(
                 st.node_free, st.node_reclaimable, data_prefs, wm,
                 jnp.asarray(False))
-            use_fb = ~ok
+            is_bhi = jnp.asarray(pc.pt_policy) == PT_BIND_HIGH
+            use_fb = is_bhi & ~ok
             node = jnp.where(use_fb, node2, node)
             slow = jnp.where(use_fb, slow2, slow)
             nf = jnp.where(use_fb, nf2, nf)
             nr = jnp.where(use_fb, nr2, nr)
-            ok = ok | ok2
+            ok = ok | (is_bhi & ok2)
         oom = missing & ~ok            # bind_all pathology (section 3.5)
         do = missing & ok
         node_arr = node_arr.at[idx].set(jnp.where(do, node, node_arr[idx]))
-        zero_cost = jnp.where(do, cc.zero_lines * write_lat(node), 0.0)
-        acost = jnp.where(do, jnp.where(slow, float(cc.alloc_slow),
-                                        float(cc.alloc_fast)), 0.0)
-        adv = do & jnp.asarray(pc.pt_policy == PT_FOLLOW_DATA
-                               and pc.data_policy == INTERLEAVE)
+        zero_cost = jnp.where(do, cc.zero_lines * write_lat(cc, node), 0.0)
+        acost = jnp.where(do, jnp.where(slow, f32(cc.alloc_slow),
+                                        f32(cc.alloc_fast)), 0.0)
+        adv = do & (jnp.asarray(pc.pt_policy) == PT_FOLLOW_DATA) \
+            & (jnp.asarray(pc.data_policy) == INTERLEAVE)
         st = dataclasses.replace(
             st,
             node_free=jnp.where(do, nf, st.node_free),
@@ -295,11 +357,11 @@ def _build_step(mc: MachineConfig, cc: CostConfig, pc: PolicyConfig):
                 slow_allocs=st.counters.slow_allocs + jnp.where(do & slow, 1, 0),
                 oom_kills=st.counters.oom_kills + oom.astype(I32)))
         cost_acc = cost_acc + zero_cost + acost + jnp.where(
-            oom, float(cc.oom_scan), 0.0)
+            oom, f32(cc.oom_scan), 0.0)
         return st, node_arr, cost_acc
 
     def phase_b_body(t, carry):
-        st, va_row, w_row, fault_mask = carry
+        st, cc, pc, va_row, w_row, fault_mask = carry
         va_t = va_row[t]
         m = jnp.clip(jnp.where(va_t >= 0, va_t >> shift, 0), 0, n_map - 1)
         do = fault_mask[t] & ~st.oom_killed
@@ -308,24 +370,25 @@ def _build_step(mc: MachineConfig, cc: CostConfig, pc: PolicyConfig):
         now_mapped = st.data_node[m] >= 0
         wait = do & now_mapped
         fault = do & ~now_mapped
-        wait_cost = jnp.where(wait, cc.fault_base + float(cc.llc_hit), 0.0)
+        wait_cost = jnp.where(wait, cc.fault_base + f32(cc.llc_hit), 0.0)
 
         tI = jnp.asarray(t, I32)
 
         def run_fault(st):
             c = jnp.zeros((), F32)
-            st2, root, c = _alloc_pt_level(st, tI, st.root_node, 0, True, c)
+            st2, root, c = _alloc_pt_level(st, cc, pc, tI, st.root_node, 0,
+                                           True, c)
             st2 = dataclasses.replace(st2, root_node=root)
             st2, top, c = _alloc_pt_level(
-                st2, tI, st2.top_node,
+                st2, cc, pc, tI, st2.top_node,
                 jnp.clip(m >> (3 * rb), 0, st2.top_node.shape[0] - 1), True, c)
             st2 = dataclasses.replace(st2, top_node=top)
             st2, mid, c = _alloc_pt_level(
-                st2, tI, st2.mid_node,
+                st2, cc, pc, tI, st2.mid_node,
                 jnp.clip(m >> (2 * rb), 0, st2.mid_node.shape[0] - 1), True, c)
             st2 = dataclasses.replace(st2, mid_node=mid)
-            st2, leaf, c = _alloc_pt_level(st2, tI, st2.leaf_node, m >> rb,
-                                           False, c)
+            st2, leaf, c = _alloc_pt_level(st2, cc, pc, tI, st2.leaf_node,
+                                           m >> rb, False, c)
             st2 = dataclasses.replace(st2, leaf_node=leaf)
 
             dprefs = alloc_mod.data_prefs_for(
@@ -337,14 +400,14 @@ def _build_step(mc: MachineConfig, cc: CostConfig, pc: PolicyConfig):
             data_node = st2.data_node.at[m].set(jnp.where(ok, node, -1))
             ldc = st2.leaf_dram_children.at[m >> rb].add(
                 jnp.where(ok & is_dram(node), 1, 0))
-            adv = jnp.asarray(pc.data_policy == INTERLEAVE) & ok
-            c = c + jnp.where(ok, cc.zero_lines * write_lat(node)
-                              + jnp.where(slow, float(cc.alloc_slow),
-                                          float(cc.alloc_fast)),
-                              float(cc.oom_scan))
+            adv = (jnp.asarray(pc.data_policy) == INTERLEAVE) & ok
+            c = c + jnp.where(ok, cc.zero_lines * write_lat(cc, node)
+                              + jnp.where(slow, f32(cc.alloc_slow),
+                                          f32(cc.alloc_fast)),
+                              f32(cc.oom_scan))
             mid_n = st2.mid_node[jnp.clip(m >> (2 * rb), 0, st2.mid_node.shape[0] - 1)]
             leaf_n = st2.leaf_node[m >> rb]
-            c = c + cc.fault_base + read_lat(mid_n) + write_lat(leaf_n)
+            c = c + cc.fault_base + read_lat(cc, mid_n) + write_lat(cc, leaf_n)
             st2 = dataclasses.replace(
                 st2, data_node=data_node, leaf_dram_children=ldc,
                 node_free=jnp.where(ok, nf, st2.node_free),
@@ -377,11 +440,12 @@ def _build_step(mc: MachineConfig, cc: CostConfig, pc: PolicyConfig):
             cyc,
             total=cyc.total.at[t].add(all_cost),
             fault=cyc.fault.at[t].add(all_cost),
-            data_mem=cyc.data_mem.at[t].add(jnp.where(wait, float(cc.llc_hit), 0.0)))
+            data_mem=cyc.data_mem.at[t].add(jnp.where(wait, f32(cc.llc_hit),
+                                                      0.0)))
         st = dataclasses.replace(st, l1_tlb=l1, stlb=stlb_, pde_pwc=pde,
                                  pdpte_pwc=pdpte, access_recent=access_recent,
                                  cycles=cyc)
-        return st, va_row, w_row, fault_mask
+        return st, cc, pc, va_row, w_row, fault_mask
 
     # ------------------------------ frees -----------------------------------
     def free_segment(st: SimState, fid, seg_of_map, seg_of_leaf):
@@ -407,32 +471,36 @@ def _build_step(mc: MachineConfig, cc: CostConfig, pc: PolicyConfig):
             l1_tlb=l1, stlb=stlb_, pde_pwc=pde)
 
     # ------------------------------ full step --------------------------------
-    def step(st: SimState, x, seg_of_map, seg_of_leaf):
-        va_row, w_row, fid, llc_rate = x
-        st = jax.lax.cond(fid >= 0,
+    # The three schedule predicates (do_free / do_scan / has_fault) arrive
+    # precomputed from the trace so they stay un-batched under vmap and the
+    # lax.conds keep actually skipping work in a batched policy sweep.
+    def step(st: SimState, cc: CostConfig, pc: PolicyConfig, x,
+             seg_of_map, seg_of_leaf):
+        va_row, w_row, fid, llc_rate, do_free, do_scan, has_fault = x
+        st = jax.lax.cond(do_free,
                           lambda s: free_segment(s, fid, seg_of_map, seg_of_leaf),
                           lambda s: s, st)
-        if pc.autonuma:
-            def scan_fn(s):
-                s2, cost = migrate_mod.autonuma_scan(s, mc, cc, pc, wm)
-                cyc = dataclasses.replace(
-                    s2.cycles,
-                    total=s2.cycles.total + cost * cc.mig_cost_scale / T,
-                    migration=s2.cycles.migration + cost)
-                return dataclasses.replace(s2, cycles=cyc)
-            st = jax.lax.cond(
-                (st.step > 0) & (st.step % pc.autonuma_period == 0)
-                & ~st.oom_killed, scan_fn, lambda s: s, st)
 
-        st, fault_mask = phase_a(st, va_row, w_row, llc_rate)
+        def scan_fn(s):
+            # autonuma_scan self-gates on pc.autonuma & ~oom_killed, so the
+            # shared schedule can fire for every lane of a mixed sweep.
+            s2, cost = migrate_mod.autonuma_scan(s, mc, cc, pc, wm, budget)
+            cyc = dataclasses.replace(
+                s2.cycles,
+                total=s2.cycles.total + cost * f32(cc.mig_cost_scale) / T,
+                migration=s2.cycles.migration + cost)
+            return dataclasses.replace(s2, cycles=cyc)
+        st = jax.lax.cond(do_scan, scan_fn, lambda s: s, st)
+
+        st, fault_mask = phase_a(st, cc, va_row, w_row, llc_rate)
 
         def run_phase_b(st):
-            st2, _, _, _ = jax.lax.fori_loop(
-                0, T, phase_b_body, (st, va_row, w_row, fault_mask))
+            st2, _, _, _, _, _ = jax.lax.fori_loop(
+                0, T, phase_b_body, (st, cc, pc, va_row, w_row, fault_mask))
             return st2
         # faults are bursty (populate) or rare (steady state): skip the
         # sequential fault loop entirely on fault-free steps
-        st = jax.lax.cond(jnp.any(fault_mask), run_phase_b, lambda s: s, st)
+        st = jax.lax.cond(has_fault, run_phase_b, lambda s: s, st)
         st = dataclasses.replace(st, step=st.step + 1)
 
         out = (jnp.sum(st.cycles.total), jnp.sum(st.cycles.walk),
@@ -449,6 +517,47 @@ def _build_step(mc: MachineConfig, cc: CostConfig, pc: PolicyConfig):
     return step
 
 
+def _compiled_run(mc: MachineConfig, budget: int):
+    """One jitted scan-over-steps per (machine shape, AutoNUMA bound).
+
+    Policy and cost configs are traced arguments, so every policy bundle —
+    and every CostConfig variation — reuses the same compiled artifact for
+    a given trace shape.
+    """
+    key = (mc, budget)
+    if key not in _RUN_CACHE:
+        step = _build_step(mc, budget)
+
+        @jax.jit
+        def run_all(st, cc, pc, xs, seg_of_map, seg_of_leaf):
+            def body(s, x):
+                return step(s, cc, pc, x, seg_of_map, seg_of_leaf)
+            return jax.lax.scan(body, st, xs)
+
+        _RUN_CACHE[key] = run_all
+    return _RUN_CACHE[key]
+
+
+def seg_of_leaf_table(trace: Trace, mc: MachineConfig) -> jax.Array:
+    seg_of_map = jnp.asarray(trace.seg_of_map, I32)
+    n_leaf = mc.n_leaf_pages
+    leaf_first = (np.arange(n_leaf, dtype=np.int64) << mc.radix_bits) \
+        % max(mc.n_map, 1)
+    return seg_of_map[jnp.asarray(leaf_first, I32)]
+
+
+def trace_xs(trace: Trace, mc: MachineConfig, pc: PolicyConfig,
+             start_step: int = 0):
+    """Scan inputs for one trace: per-step rows + schedule predicates."""
+    do_free = np.asarray(trace.free_seg) >= 0
+    do_scan = scan_step_mask(trace.n_steps, int(pc.autonuma_period),
+                             enabled=bool(pc.autonuma), start_step=start_step)
+    return (jnp.asarray(trace.va, I32), jnp.asarray(trace.is_write),
+            jnp.asarray(trace.free_seg, I32), jnp.asarray(trace.llc, F32),
+            jnp.asarray(do_free), jnp.asarray(do_scan),
+            jnp.asarray(fault_step_mask(trace, mc)))
+
+
 class TieredMemSimulator:
     """Public facade: configure once, run traces under a policy bundle."""
 
@@ -461,29 +570,18 @@ class TieredMemSimulator:
         mc = self.mc
         assert trace.va.shape[1] == mc.n_threads, \
             f"trace has {trace.va.shape[1]} threads, machine {mc.n_threads}"
-        key = (self.mc, self.cc, self.pc)
-        if key not in _RUN_CACHE:
-            step = _build_step(*key)
-
-            @jax.jit
-            def run_all(st, xs, seg_of_map, seg_of_leaf):
-                def body(s, x):
-                    return step(s, x, seg_of_map, seg_of_leaf)
-                return jax.lax.scan(body, st, xs)
-
-            _RUN_CACHE[key] = run_all
-        run_all = _RUN_CACHE[key]
+        budget = min(int(self.pc.autonuma_budget), mc.n_map)
+        run_all = _compiled_run(mc, budget)
 
         seg_of_map = jnp.asarray(trace.seg_of_map, I32)
-        n_leaf = mc.n_leaf_pages
-        leaf_first = (np.arange(n_leaf, dtype=np.int64) << mc.radix_bits) % max(mc.n_map, 1)
-        seg_of_leaf = seg_of_map[jnp.asarray(leaf_first, I32)]
+        seg_of_leaf = seg_of_leaf_table(trace, mc)
 
         st0 = state if state is not None else init_state(mc)
-        xs = (jnp.asarray(trace.va, I32), jnp.asarray(trace.is_write),
-              jnp.asarray(trace.free_seg, I32), jnp.asarray(trace.llc, F32))
+        start = int(np.asarray(state.step)) if state is not None else 0
+        xs = trace_xs(trace, mc, self.pc, start_step=start)
 
-        final, outs = run_all(st0, xs, seg_of_map, seg_of_leaf)
+        final, outs = run_all(st0, self.cc, self.pc, xs, seg_of_map,
+                              seg_of_leaf)
         final = jax.device_get(final)
         timeline = {k: np.asarray(v) for k, v in zip(TIMELINE_KEYS, outs)}
         return RunResult(final_state=final, timeline=timeline,

@@ -1,0 +1,199 @@
+"""Batched policy-sweep engine: N policies × M traces in ONE ``lax.scan``.
+
+Every benchmark in the reproduction compares page-table placement policies
+on identical access traces.  Running them as separate Python-loop
+iterations compiles one scan per policy and pays a device round-trip each;
+this module instead stacks the policies (and optionally several same-shape
+padded traces) into a leading *lane* axis, vmaps the policy-generic
+simulator step (``sim._build_step``) over it, and runs the whole grid as a
+single compiled ``lax.scan`` — one compile per trace shape, one device
+program per figure.
+
+Correctness contract: a sweep lane is bit-identical (placements, counters;
+cycles to float32 rounding) to the corresponding sequential
+``TieredMemSimulator`` run and to the pure-Python ``core.ref`` oracle —
+``tests/test_sweep.py`` enforces both.
+
+Constraints inherited from the step being compiled once for all lanes:
+
+  * all traces must share one ``[steps, threads]`` shape (``pad_trace``);
+  * all AutoNUMA-enabled policies must share ``autonuma_period`` (the scan
+    schedule is a host-precomputed, lane-shared predicate so ``lax.cond``
+    survives vmap);
+  * the AutoNUMA ``top_k`` bound is the max ``autonuma_budget`` over the
+    swept policies; per-lane budgets gate through traced masks.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import CostConfig, MachineConfig, PolicyConfig
+from .sim import (RunResult, TIMELINE_KEYS, Trace, _build_step,
+                  fault_step_mask, scan_step_mask, seg_of_leaf_table)
+from .state import init_state
+
+I32 = jnp.int32
+F32 = jnp.float32
+
+# One jitted vmapped scan per (machine, budget); jax's jit cache then holds
+# one executable per (lane count, trace shape).
+_SWEEP_CACHE: Dict[Tuple, object] = {}
+# Fallback compile accounting for jax versions without the (private)
+# jit _cache_size API: one entry per distinct compiled signature.
+_SIGNATURES = set()
+
+
+def compile_count() -> int:
+    """Number of XLA compilations performed by sweep() so far.
+
+    Counts entries in the underlying jit caches (one per distinct
+    (machine, budget, lane-count, trace-shape) combination) — tests assert
+    a ≥4-policy sweep adds exactly one.  Falls back to sweep()'s own
+    signature accounting if the jit cache-size API is unavailable.
+    """
+    sizes = [getattr(fn, "_cache_size", None) for fn in _SWEEP_CACHE.values()]
+    if all(s is not None for s in sizes):
+        return int(sum(s() for s in sizes))
+    return len(_SIGNATURES)
+
+
+def stack_policies(policies: Sequence[PolicyConfig]) -> PolicyConfig:
+    """Stack N PolicyConfigs into one whose leaves are ``[N]`` arrays."""
+    return _stack_leaves(list(policies))
+
+
+def _stack_leaves(objs):
+    def stack(*leaves):
+        a = np.stack([np.asarray(leaf) for leaf in leaves])
+        if a.dtype.kind in "iu":
+            return jnp.asarray(a, I32)
+        if a.dtype.kind == "f":
+            return jnp.asarray(a, F32)
+        return jnp.asarray(a)
+    return jax.tree.map(stack, *objs)
+
+
+def _sweep_runner(mc: MachineConfig, budget: int):
+    key = (mc, budget)
+    if key not in _SWEEP_CACHE:
+        step = _build_step(mc, budget)
+
+        @jax.jit
+        def run_sweep(st, cc, pc, xs, seg_of_map, seg_of_leaf):
+            def body(carry, x):
+                va_row, w_row, fid, llc, do_free, do_scan, has_fault = x
+
+                def lane(st1, cc1, pc1, va1, w1, fid1, llc1, sm, sl):
+                    # the schedule predicates stay un-batched so the
+                    # step's lax.conds keep skipping work under vmap
+                    return step(st1, cc1, pc1,
+                                (va1, w1, fid1, llc1, do_free, do_scan,
+                                 has_fault), sm, sl)
+                return jax.vmap(lane)(carry, cc, pc, va_row, w_row, fid,
+                                      llc, seg_of_map, seg_of_leaf)
+            return jax.lax.scan(body, st, xs)
+
+        _SWEEP_CACHE[key] = run_sweep
+    return _SWEEP_CACHE[key]
+
+
+def sweep(mc: MachineConfig,
+          cc: Union[CostConfig, Sequence[CostConfig]],
+          policies: Sequence[PolicyConfig],
+          traces: Union[Trace, Sequence[Trace]],
+          ) -> Union[List[RunResult], List[List[RunResult]]]:
+    """Run every (trace, policy) pair as one batched compiled scan.
+
+    Returns a list of RunResults aligned with ``policies`` when ``traces``
+    is a single Trace, else a list-of-lists indexed ``[trace][policy]``.
+    ``cc`` may be a single CostConfig (shared) or one per policy.
+    """
+    single = isinstance(traces, Trace)
+    tr_list = [traces] if single else list(traces)
+    policies = list(policies)
+    P, M = len(policies), len(tr_list)
+    if P == 0 or M == 0:
+        raise ValueError("sweep needs at least one policy and one trace")
+
+    shape = tr_list[0].va.shape
+    for tr in tr_list:
+        if tr.va.shape != shape:
+            raise ValueError(
+                f"sweep traces must share one shape; got {tr.va.shape} vs "
+                f"{shape} — pad_trace() them first")
+    if shape[1] != mc.n_threads:
+        raise ValueError(f"traces have {shape[1]} threads, machine has "
+                         f"{mc.n_threads}")
+
+    ccs = list(cc) if isinstance(cc, (list, tuple)) else [cc] * P
+    if len(ccs) != P:
+        raise ValueError("need one CostConfig per policy (or a shared one)")
+
+    periods = sorted({int(p.autonuma_period) for p in policies
+                      if bool(p.autonuma)})
+    if len(periods) > 1:
+        raise ValueError(
+            f"swept policies must share autonuma_period, got {periods}; the "
+            "scan schedule is lane-shared")
+    period = periods[0] if periods else int(policies[0].autonuma_period)
+    budget = min(max(int(p.autonuma_budget) for p in policies), mc.n_map)
+
+    # Lane layout: trace-major, policy-minor (lane = trace_idx * P + pol_idx).
+    L = P * M
+    lane_pc = _stack_leaves([p for _ in range(M) for p in policies])
+    lane_cc = _stack_leaves([c for _ in range(M) for c in ccs])
+
+    def lane_rows(per_trace, dtype):
+        a = np.stack([np.asarray(x, dtype) for x in per_trace], axis=1)
+        return jnp.asarray(np.repeat(a, P, axis=1))
+
+    S = shape[0]
+    va = lane_rows([tr.va for tr in tr_list], np.int32)          # [S, L, T]
+    wr = lane_rows([tr.is_write for tr in tr_list], bool)
+    fid = lane_rows([tr.free_seg for tr in tr_list], np.int32)   # [S, L]
+    llc = lane_rows([tr.llc for tr in tr_list], np.float32)
+
+    do_free = np.zeros((S,), bool)
+    has_fault = np.zeros((S,), bool)
+    for tr in tr_list:
+        do_free |= np.asarray(tr.free_seg) >= 0
+        has_fault |= fault_step_mask(tr, mc)
+    do_scan = scan_step_mask(S, period,
+                             enabled=any(bool(p.autonuma) for p in policies))
+    xs = (va, wr, fid, llc, jnp.asarray(do_free), jnp.asarray(do_scan),
+          jnp.asarray(has_fault))
+
+    seg_maps = np.stack([np.asarray(tr.seg_of_map, np.int32)
+                         for tr in tr_list])                     # [M, n_map]
+    seg_of_map = jnp.asarray(np.repeat(seg_maps, P, axis=0))     # [L, n_map]
+    seg_leafs = np.stack([np.asarray(seg_of_leaf_table(tr, mc))
+                          for tr in tr_list])                    # [M, n_leaf]
+    seg_of_leaf = jnp.asarray(np.repeat(seg_leafs, P, axis=0))
+
+    st0 = jax.tree.map(lambda a: jnp.broadcast_to(a[None], (L,) + a.shape),
+                       init_state(mc))
+
+    run_sweep = _sweep_runner(mc, budget)
+    _SIGNATURES.add((mc, budget, L, S))
+    final, outs = run_sweep(st0, lane_cc, lane_pc, xs, seg_of_map,
+                            seg_of_leaf)
+    final = jax.device_get(final)
+    outs = [np.asarray(o) for o in jax.device_get(outs)]
+
+    results: List[List[RunResult]] = []
+    for j, tr in enumerate(tr_list):
+        row = []
+        for i, pc in enumerate(policies):
+            lane_idx = j * P + i
+            st_lane = jax.tree.map(lambda a: a[lane_idx], final)
+            timeline = {k: v[:, lane_idx]
+                        for k, v in zip(TIMELINE_KEYS, outs)}
+            row.append(RunResult(final_state=st_lane, timeline=timeline,
+                                 trace_name=tr.name,
+                                 policy_label=pc.label()))
+        results.append(row)
+    return results[0] if single else results

@@ -70,3 +70,30 @@ def model_flops(cfg, shape) -> float:
     return 2.0 * n * shape.global_batch          # decode: one token per seq
 
 
+def policy_sweep_summary(mc, policies, trace, cc=None, baseline: int = 0):
+    """Ad-hoc policy comparison on one trace via the batched sweep engine.
+
+    Runs every PolicyConfig in ``policies`` as one compiled batched scan
+    (``repro.core.sweep``) and returns ``{label: summary}`` where each
+    summary carries the simulator metrics plus ``improvement_pct`` of
+    ``total_cycles`` against the ``baseline``-indexed policy.  Imports the
+    simulator lazily so this module stays importable without touching jax
+    device state.
+    """
+    from repro.core import CostConfig, sweep
+
+    results = sweep(mc, cc if cc is not None else CostConfig(), policies,
+                    trace)
+    base_total = results[baseline].summary()["total_cycles"]
+    out = {}
+    for i, (pc, res) in enumerate(zip(policies, results)):
+        m = res.summary()
+        m["improvement_pct"] = (100.0 * (base_total - m["total_cycles"])
+                                / max(base_total, 1e-12))
+        key = pc.label()
+        if key in out:            # same label, different non-label knobs
+            key = f"{key}#{i}"
+        out[key] = m
+    return out
+
+

@@ -50,6 +50,62 @@ def test_pt_walk_sweep(n_leaf, fanout, n):
     np.testing.assert_array_equal(np.asarray(s), np.asarray(ws))
 
 
+def _pt_walk_xla(upper, ltier, lent, vb):
+    """Plain-XLA gather reference for the pt_walk kernel semantics."""
+    fanout = lent.shape[1]
+    leaf_idx = vb // fanout
+    entry = vb % fanout
+    leaf_id = upper[leaf_idx]
+    valid = leaf_id >= 0
+    safe = jnp.where(valid, leaf_id, 0)
+    tier = jnp.where(valid, ltier[safe], -1)
+    slot = jnp.where(valid, lent[safe, entry], -1)
+    return tier, slot
+
+
+@pytest.mark.parametrize("invalid_frac", [0.0, 0.5, 1.0])
+def test_pt_walk_invalid_entries(invalid_frac):
+    """Walks through unallocated (-1) upper entries must yield (-1, -1)."""
+    n_leaf, fanout, n = 16, 64, 512
+    upper = np.asarray(RNG.permutation(n_leaf), np.int32)
+    kill = RNG.random(n_leaf) < invalid_frac
+    if invalid_frac > 0:
+        kill[0] = True                              # at least one hole
+    upper[kill] = -1
+    upper = jnp.asarray(upper)
+    ltier = jnp.asarray(RNG.integers(0, 2, n_leaf), jnp.int32)
+    lent = jnp.asarray(RNG.integers(0, 64, (n_leaf, fanout)), jnp.int32)
+    # force every upper slot (valid and invalid) to be queried
+    vb = jnp.asarray(np.concatenate([
+        np.arange(n_leaf, dtype=np.int32) * fanout,
+        RNG.integers(0, n_leaf * fanout, n - n_leaf).astype(np.int32)]))
+    t, s = pt_walk_kernel(upper, ltier, lent, vb, interpret=True)
+    wt, ws = _pt_walk_xla(upper, ltier, lent, vb)
+    np.testing.assert_array_equal(np.asarray(t), np.asarray(wt))
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(ws))
+    hit_invalid = np.asarray(upper)[np.asarray(vb) // fanout] < 0
+    assert np.all(np.asarray(t)[hit_invalid] == -1)
+    assert np.all(np.asarray(s)[hit_invalid] == -1)
+    if invalid_frac > 0:
+        assert hit_invalid.any()
+
+
+@pytest.mark.parametrize("n,q_block", [(512, 64), (1024, 128), (768, 256)])
+def test_pt_walk_grid_tiling(n, q_block):
+    """A non-trivial grid (n > q_block) must tile without edge effects."""
+    n_leaf, fanout = 8, 128
+    assert n > q_block
+    upper = jnp.asarray(RNG.permutation(n_leaf), jnp.int32).at[1].set(-1)
+    ltier = jnp.asarray(RNG.integers(0, 2, n_leaf), jnp.int32)
+    lent = jnp.asarray(RNG.integers(0, 64, (n_leaf, fanout)), jnp.int32)
+    vb = jnp.asarray(RNG.integers(0, n_leaf * fanout, n), jnp.int32)
+    t, s = pt_walk_kernel(upper, ltier, lent, vb, q_block=q_block,
+                          interpret=True)
+    wt, ws = _pt_walk_xla(upper, ltier, lent, vb)
+    np.testing.assert_array_equal(np.asarray(t), np.asarray(wt))
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(ws))
+
+
 @pytest.mark.parametrize("P,bs,KH,Dh,M", [
     (8, 8, 1, 128, 1), (16, 16, 2, 128, 5), (32, 8, 4, 256, 12)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

@@ -1,0 +1,231 @@
+"""Batched policy-sweep engine vs sequential runs vs the pure-Python oracle.
+
+The vmap refactor must not change semantics: every lane of a ``sweep()``
+must be bit-identical (placement arrays, counters) to the corresponding
+independent ``TieredMemSimulator`` run and to the ``core.ref`` oracle,
+with cycle totals matching to float32 rounding.  The whole sweep must also
+compile exactly once per trace shape.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (CostConfig, MachineConfig, PolicyConfig,
+                        TieredMemSimulator, Trace, pad_trace, sweep,
+                        sweep_compile_count, FIRST_TOUCH, INTERLEAVE,
+                        PT_BIND_ALL, PT_BIND_HIGH, PT_FOLLOW_DATA)
+from repro.core.ref import OracleSim
+
+EXACT_KEYS = ("l1_hits", "stlb_hits", "walks", "walk_mem_reads", "faults",
+              "slow_allocs", "data_migrations", "demotions",
+              "l4_mig_success", "l4_mig_already_dest", "l4_mig_in_dram",
+              "l4_mig_sibling_guard", "l4_mig_lock_skip",
+              "data_pages_dram", "data_pages_nvmm",
+              "leaf_pages_dram", "leaf_pages_nvmm", "oom_killed", "oom_step")
+CYCLE_KEYS = ("total_cycles", "walk_cycles", "stall_cycles",
+              "data_mem_cycles", "fault_cycles", "migration_cycles")
+PLACEMENT_ARRAYS = ("data_node", "leaf_node", "mid_node", "top_node",
+                    "root_node", "leaf_dram_children", "node_free")
+
+# The issue's sweep set: {first-touch, interleave} x {follow_data, BHi},
+# plus Mig and the bind-all pathology.
+POLICIES = [
+    PolicyConfig(data_policy=FIRST_TOUCH, pt_policy=PT_FOLLOW_DATA,
+                 autonuma=True, autonuma_period=16, autonuma_budget=32),
+    PolicyConfig(data_policy=FIRST_TOUCH, pt_policy=PT_BIND_HIGH, mig=True,
+                 autonuma=True, autonuma_period=16, autonuma_budget=32),
+    PolicyConfig(data_policy=INTERLEAVE, pt_policy=PT_FOLLOW_DATA,
+                 autonuma=False),
+    PolicyConfig(data_policy=INTERLEAVE, pt_policy=PT_BIND_HIGH,
+                 autonuma=True, autonuma_period=16, autonuma_budget=16),
+]
+
+
+def tiny_machine():
+    return MachineConfig(n_threads=4, dram_pages_per_node=600,
+                         nvmm_pages_per_node=2400, va_pages=1 << 12,
+                         l1_tlb_sets=4, l1_tlb_ways=2, stlb_sets=8,
+                         stlb_ways=4, pde_pwc_entries=4, pdpte_pwc_entries=2)
+
+
+def random_trace(mc, steps=160, seed=0, free_at=None, name="rand"):
+    rng = np.random.default_rng(seed)
+    T = mc.n_threads
+    va = np.where(rng.random((steps, T)) < 0.5,
+                  rng.integers(0, mc.va_pages // 2, (steps, T)),
+                  rng.integers(0, mc.va_pages, (steps, T))).astype(np.int32)
+    va[rng.random((steps, T)) < 0.05] = -1
+    wr = rng.random((steps, T)) < 0.3
+    free_seg = np.full((steps,), -1, np.int32)
+    if free_at is not None:
+        free_seg[free_at] = 0
+    seg = np.zeros((mc.n_map,), np.int32)
+    seg[mc.n_map // 2:] = 1
+    llc = np.full((steps,), 0.4, np.float32)
+    return Trace(va=va, is_write=wr, free_seg=free_seg, llc=llc,
+                 seg_of_map=seg, name=name)
+
+
+def assert_lane_matches_sequential(res, seq):
+    s1, s2 = res.summary(), seq.summary()
+    for k in EXACT_KEYS:
+        assert s1[k] == s2[k], f"{res.policy_label}: {k}: {s1[k]} != {s2[k]}"
+    for arr in PLACEMENT_ARRAYS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(res.final_state, arr)),
+            np.asarray(getattr(seq.final_state, arr)),
+            err_msg=f"{res.policy_label}: {arr}")
+    for k in CYCLE_KEYS:
+        np.testing.assert_allclose(s1[k], s2[k], rtol=1e-6,
+                                   err_msg=f"{res.policy_label}: {k}")
+    for k in res.timeline:
+        np.testing.assert_allclose(res.timeline[k], seq.timeline[k],
+                                   rtol=1e-6,
+                                   err_msg=f"{res.policy_label}: tl/{k}")
+
+
+def assert_lane_matches_oracle(res, mc, cc, pc, trace):
+    oracle = OracleSim(mc, cc, pc)
+    oracle.run(trace)
+    ref = oracle.summary()
+    s = res.summary()
+    for k in EXACT_KEYS:
+        assert s[k] == ref[k], \
+            f"{pc.label()}: oracle {k}: {s[k]} != {ref[k]}"
+    for k in CYCLE_KEYS:
+        np.testing.assert_allclose(s[k], ref[k], rtol=1e-5,
+                                   err_msg=f"{pc.label()}: oracle {k}")
+
+
+def test_sweep_matches_sequential_and_oracle():
+    """One batched sweep == 4 independent runs == 4 oracle runs."""
+    mc = tiny_machine()
+    cc = CostConfig()
+    trace = random_trace(mc, seed=3, free_at=100)
+
+    batch = sweep(mc, cc, POLICIES, trace)
+    assert len(batch) == len(POLICIES)
+    for pc, res in zip(POLICIES, batch):
+        seq = TieredMemSimulator(mc=mc, cc=cc, pc=pc).run(trace)
+        assert_lane_matches_sequential(res, seq)
+        assert_lane_matches_oracle(res, mc, cc, pc, trace)
+
+
+def test_sweep_single_compile_per_trace_shape():
+    """A >=4-policy sweep costs exactly one lax.scan compilation, and
+    re-sweeping the same shape (other policies, other trace data) costs
+    zero more; a new trace shape costs exactly one more."""
+    mc = tiny_machine()
+    cc = CostConfig()
+    trace = random_trace(mc, seed=11, steps=96)
+
+    before = sweep_compile_count()
+    sweep(mc, cc, POLICIES, trace)
+    after_first = sweep_compile_count()
+    assert after_first == before + 1
+
+    # same shape, different policy bundles and different trace content
+    reordered = list(reversed(POLICIES))
+    sweep(mc, cc, reordered, random_trace(mc, seed=12, steps=96))
+    assert sweep_compile_count() == after_first
+
+    # a new trace shape compiles exactly once more
+    sweep(mc, cc, POLICIES, random_trace(mc, seed=13, steps=128))
+    assert sweep_compile_count() == after_first + 1
+
+
+def test_sweep_multi_trace_grid():
+    """Policies x padded traces in one scan, including a mid-run free."""
+    mc = tiny_machine()
+    cc = CostConfig()
+    policies = POLICIES[:2]
+    traces = [random_trace(mc, seed=21, steps=120, name="a"),
+              random_trace(mc, seed=22, steps=96, free_at=60, name="b")]
+    steps = max(t.n_steps for t in traces)
+    traces = [pad_trace(t, steps) for t in traces]
+
+    grid = sweep(mc, cc, policies, traces)
+    assert len(grid) == len(traces) and len(grid[0]) == len(policies)
+    for trace, row in zip(traces, grid):
+        for pc, res in zip(policies, row):
+            assert res.trace_name == trace.name
+            seq = TieredMemSimulator(mc=mc, cc=cc, pc=pc).run(trace)
+            assert_lane_matches_sequential(res, seq)
+
+
+def sequential_trace(mc, steps, name="seq"):
+    """Sequential heap growth: every step maps new pages (and, with a small
+    radix, keeps demanding new PT pages long after DRAM has filled)."""
+    T = mc.n_threads
+    s = np.arange(steps, dtype=np.int32)[:, None]
+    t = np.arange(T, dtype=np.int32)[None, :]
+    va = np.minimum(s * T + t, mc.va_pages - 1).astype(np.int32)
+    return Trace(va=va, is_write=np.ones((steps, T), bool),
+                 free_seg=np.full((steps,), -1, np.int32),
+                 llc=np.full((steps,), 0.3, np.float32),
+                 seg_of_map=np.zeros((mc.n_map,), np.int32), name=name)
+
+
+def test_sweep_bind_all_oom_lane():
+    """An OOM-ing bind-all lane must not perturb its sweep neighbours."""
+    mc = MachineConfig(n_threads=4, dram_pages_per_node=150,
+                       nvmm_pages_per_node=1600, va_pages=1 << 11,
+                       radix_bits=4,
+                       l1_tlb_sets=4, l1_tlb_ways=2, stlb_sets=8,
+                       stlb_ways=4, pde_pwc_entries=4, pdpte_pwc_entries=2)
+    cc = CostConfig()
+    policies = [
+        PolicyConfig(data_policy=FIRST_TOUCH, pt_policy=PT_FOLLOW_DATA,
+                     autonuma=False),
+        PolicyConfig(data_policy=FIRST_TOUCH, pt_policy=PT_BIND_ALL,
+                     autonuma=False),
+        PolicyConfig(data_policy=FIRST_TOUCH, pt_policy=PT_BIND_HIGH,
+                     autonuma=False),
+    ]
+    trace = sequential_trace(mc, steps=256)
+    batch = sweep(mc, cc, policies, trace)
+    assert batch[1].summary()["oom_killed"], \
+        "bind-all should OOM under memory pressure (paper fig. 7)"
+    for pc, res in zip(policies, batch):
+        seq = TieredMemSimulator(mc=mc, cc=cc, pc=pc).run(trace)
+        assert_lane_matches_sequential(res, seq)
+        assert_lane_matches_oracle(res, mc, cc, pc, trace)
+
+
+def test_sweep_thp_machine():
+    """fig13's setting: THP machine (3-level walks, PMD leaves)."""
+    mc = MachineConfig(n_threads=4, dram_pages_per_node=600,
+                       nvmm_pages_per_node=2400, va_pages=1 << 12,
+                       page_order=9,
+                       l1_tlb_sets=4, l1_tlb_ways=2, stlb_sets=8,
+                       stlb_ways=4, pde_pwc_entries=4, pdpte_pwc_entries=2)
+    cc = CostConfig()
+    policies = [POLICIES[0], POLICIES[1]]
+    trace = random_trace(mc, seed=51)
+    for pc, res in zip(policies, sweep(mc, cc, policies, trace)):
+        seq = TieredMemSimulator(mc=mc, cc=cc, pc=pc).run(trace)
+        assert_lane_matches_sequential(res, seq)
+        assert_lane_matches_oracle(res, mc, cc, pc, trace)
+
+
+def test_sweep_rejects_mixed_periods_and_shapes():
+    mc = tiny_machine()
+    cc = CostConfig()
+    tr = random_trace(mc, seed=41, steps=64)
+    mixed = [PolicyConfig(autonuma=True, autonuma_period=16),
+             PolicyConfig(autonuma=True, autonuma_period=32)]
+    with pytest.raises(ValueError, match="autonuma_period"):
+        sweep(mc, cc, mixed, tr)
+    with pytest.raises(ValueError, match="shape"):
+        sweep(mc, cc, POLICIES, [tr, random_trace(mc, seed=42, steps=65)])
+
+
+def test_policy_config_rejects_bad_codes():
+    with pytest.raises(ValueError, match="data_policy"):
+        PolicyConfig(data_policy=PT_FOLLOW_DATA)   # PT code in data field
+    with pytest.raises(ValueError, match="pt_policy"):
+        PolicyConfig(pt_policy=99)
+    with pytest.raises(ValueError, match="data_policy"):
+        PolicyConfig(data_policy="first-touch")    # typo'd legacy spelling
+    # legacy string spellings still normalize to codes
+    pc = PolicyConfig(data_policy="interleave", pt_policy="bind_high")
+    assert pc.data_policy == INTERLEAVE and pc.pt_policy == PT_BIND_HIGH
