@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import json
 import time
+from collections import OrderedDict
 from pathlib import Path
 from typing import Dict, List, Optional
 
@@ -37,14 +38,41 @@ WORKLOADS = ("memcached", "redis", "btree", "hashjoin", "xsbench", "bfs")
 WORKLOADS_SMALL = ("memcached", "redis", "btree", "xsbench")
 
 
+# Figures regenerate the same workload traces (and their padded variants)
+# many times over a suite run; both are cached here.  Raw traces key on
+# (workload, machine, footprint, steps); padded variants additionally on
+# the padded shape, so every figure sharing a shape reuses one array set —
+# and, downstream, one `sim.fault_schedule` host pass and one compile.
+# LRU-bounded like sim._SCHED_CACHE: a suite run stays well under the cap,
+# while a long-lived process sweeping many machine/step combinations
+# doesn't pin FOOTPRINT-scale arrays forever.
+_TRACE_CACHE: "OrderedDict[tuple, Trace]" = OrderedDict()
+_TRACE_CACHE_MAX = 48
+
+
+def _trace_cached(key, build) -> Trace:
+    if key not in _TRACE_CACHE:
+        _TRACE_CACHE[key] = build()
+        while len(_TRACE_CACHE) > _TRACE_CACHE_MAX:
+            _TRACE_CACHE.popitem(last=False)
+    else:
+        _TRACE_CACHE.move_to_end(key)
+    return _TRACE_CACHE[key]
+
+
 def make_traces(mc: MachineConfig, run_steps: int = RUN_STEPS,
                 names=WORKLOADS) -> Dict[str, Trace]:
     traces = {}
     for name in names:
         gen = workloads.ALL_WORKLOADS[name]
-        traces[name] = gen(mc, FOOTPRINT, run_steps)
+        traces[name] = _trace_cached((name, mc, FOOTPRINT, run_steps),
+                                     lambda: gen(mc, FOOTPRINT, run_steps))
     steps = max(t.n_steps for t in traces.values())
-    return {k: pad_trace(t, steps) for k, t in traces.items()}
+    # pad_trace returns the input unchanged when already long enough, so
+    # the longest trace's "padded" entry aliases its raw one (no copy)
+    return {name: _trace_cached((name, mc, FOOTPRINT, run_steps, steps),
+                                lambda: pad_trace(tr, steps))
+            for name, tr in traces.items()}
 
 
 def run(mc: MachineConfig, pc: PolicyConfig, trace: Trace):

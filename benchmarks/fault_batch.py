@@ -1,0 +1,91 @@
+"""Populate-phase fault-engine micro-benchmark (perf-trajectory tracker).
+
+Measures warm steps/sec of the batched conflict-aware phase B against the
+retained sequential ``fori_loop`` reference, on a fault-dominated
+(populate) trace and a steady-state control, at 1 lane (the plain
+``TieredMemSimulator`` path) and an 8-lane vmapped policy sweep — the
+configuration where the old per-thread ``lax.cond`` lowered to a select
+and cost ~1.5x per lane.  Writes ``artifacts/bench/fault_batch.json`` so
+the populate-phase perf trajectory is tracked from PR 3 onward; the
+acceptance bar is >= 1.3x on the 8-lane populate sweep with the
+steady-state control at parity or better.
+"""
+from __future__ import annotations
+
+import time
+
+from . import common
+from repro.core import (CostConfig, PolicyConfig, TieredMemSimulator, sweep,
+                        benchmark_machine, workloads, FIRST_TOUCH,
+                        INTERLEAVE, PT_BIND_ALL, PT_BIND_HIGH,
+                        PT_FOLLOW_DATA)
+
+
+def eight_policies():
+    pols = [PolicyConfig(data_policy=d, pt_policy=p, autonuma=False)
+            for d in (FIRST_TOUCH, INTERLEAVE)
+            for p in (PT_FOLLOW_DATA, PT_BIND_ALL, PT_BIND_HIGH)]
+    pols += [PolicyConfig(data_policy=d, pt_policy=PT_BIND_HIGH, mig=True,
+                          autonuma=False) for d in (FIRST_TOUCH, INTERLEAVE)]
+    return pols
+
+
+def _timed(fn):
+    fn()                       # compile + warm (schedule host pass cached)
+    t0 = time.time()
+    fn()
+    return time.time() - t0
+
+
+def bench_trace(mc, tr, pols, cc):
+    out = {"steps": tr.n_steps, "populate_steps": tr.populate_steps}
+    for lanes, label in ((1, "1lane"), (len(pols), f"{len(pols)}lane")):
+        row = {}
+        for mode in ("sequential", "batched"):
+            if lanes == 1:
+                sim = TieredMemSimulator(mc=mc, cc=cc, pc=pols[0],
+                                         phase_b=mode)
+                secs = _timed(lambda: sim.run(tr))
+            else:
+                secs = _timed(lambda: sweep(mc, cc, pols, tr, phase_b=mode))
+            row[mode] = {"seconds": secs,
+                         "lane_steps_per_sec": tr.n_steps * lanes / secs}
+        row["speedup"] = (row["batched"]["lane_steps_per_sec"]
+                          / row["sequential"]["lane_steps_per_sec"])
+        out[label] = row
+    return out
+
+
+def main(quick: bool = False):
+    mc = benchmark_machine()
+    cc = CostConfig()
+    pols = eight_policies()
+    pop_fp = 1 << 12 if quick else 1 << 14
+    steady_steps = 512 if quick else 2048
+
+    # fault-dominated: sequential heap growth, nearly every step faults
+    tr_pop = workloads.kv_store(mc, pop_fp, run_steps=64, seed=10,
+                                name="populate")
+    # steady-state control: short populate, long zipfian run phase
+    tr_run = workloads.kv_store(mc, 1 << 12, run_steps=steady_steps,
+                                seed=10, name="steady")
+
+    results = {"populate": bench_trace(mc, tr_pop, pols, cc),
+               "steady": bench_trace(mc, tr_run, pols, cc)}
+    rows = []
+    for phase in ("populate", "steady"):
+        for label in ("1lane", f"{len(pols)}lane"):
+            r = results[phase][label]
+            rows.append((
+                f"fault_batch/{phase}/{label}",
+                r["batched"]["seconds"],
+                f"speedup={r['speedup']:.2f}x;"
+                f"batched_sps={r['batched']['lane_steps_per_sec']:.0f};"
+                f"sequential_sps={r['sequential']['lane_steps_per_sec']:.0f}"))
+    common.emit(rows)
+    common.save_artifact("fault_batch", results)
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -32,6 +32,11 @@ def main(quick: bool = False):
             imp = {k: common.improvement(base[f"run_{k}_cycles"],
                                          m[f"run_{k}_cycles"])
                    for k in ("total", "walk", "stall")}
+            # populate-phase (startup) deltas ride along: each trace's
+            # populate prefix is exactly the fault-storm regime the
+            # batched phase-B engine vectorizes
+            imp["startup_total"] = common.improvement(
+                base["startup_total_cycles"], m["startup_total_cycles"])
             results.setdefault(wname, {})[pname] = {**m, "improv": imp}
             rows.append((f"fig9/{wname}/{pname}", secs,
                          f"total%={imp['total']:.1f};walk%={imp['walk']:.1f};"

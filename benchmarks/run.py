@@ -22,9 +22,10 @@ def main() -> None:
                     help="comma-separated module subset, e.g. fig9,table4")
     args = ap.parse_args()
 
-    from . import (fig1_startup, fig5_ptdist, fig6_walklat, fig7_bind,
-                   fig9_fullsystem, fig10_multitenant, fig11_interleave,
-                   fig13_thp, kv_tiering, roofline, table4_summary)
+    from . import (fault_batch, fig1_startup, fig5_ptdist, fig6_walklat,
+                   fig7_bind, fig9_fullsystem, fig10_multitenant,
+                   fig11_interleave, fig13_thp, kv_tiering, roofline,
+                   table4_summary)
 
     modules = [
         ("fig1", fig1_startup), ("fig5", fig5_ptdist),
@@ -32,7 +33,7 @@ def main() -> None:
         ("fig9", fig9_fullsystem), ("fig10", fig10_multitenant),
         ("fig11", fig11_interleave), ("fig13", fig13_thp),
         ("table4", table4_summary), ("kv_tiering", kv_tiering),
-        ("roofline", roofline),
+        ("roofline", roofline), ("fault_batch", fault_batch),
     ]
     if args.only:
         keep = set(args.only.split(","))

@@ -6,8 +6,8 @@ Memory Systems" (Kumar et al., 2021).  See DESIGN.md section 2, Pillar A.
 from .config import (CostConfig, MachineConfig, PolicyConfig, FIRST_TOUCH,
                      INTERLEAVE, PT_BIND_ALL, PT_BIND_HIGH, PT_FOLLOW_DATA,
                      benchmark_machine, bhi, bhi_mig, bind_all, linux_default)
-from .sim import (RunResult, TieredMemSimulator, Trace, fault_step_mask,
-                  pad_trace)
+from .sim import (RunResult, TieredMemSimulator, Trace, fault_schedule,
+                  fault_step_mask, pad_trace)
 from .state import SimState, init_state, is_dram, same_tier
 from .sweep import compile_count as sweep_compile_count
 from .sweep import stack_policies, sweep
@@ -17,7 +17,8 @@ __all__ = [
     "CostConfig", "MachineConfig", "PolicyConfig", "FIRST_TOUCH",
     "INTERLEAVE", "PT_BIND_ALL", "PT_BIND_HIGH", "PT_FOLLOW_DATA",
     "benchmark_machine", "bhi", "bhi_mig", "bind_all", "linux_default",
-    "RunResult", "TieredMemSimulator", "Trace", "fault_step_mask",
+    "RunResult", "TieredMemSimulator", "Trace", "fault_schedule",
+    "fault_step_mask",
     "pad_trace", "SimState", "init_state", "is_dram", "same_tier",
     "stack_policies", "sweep", "sweep_compile_count", "workloads",
 ]

@@ -19,7 +19,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from .config import (MachineConfig, INTERLEAVE, PT_BIND_ALL, PT_BIND_HIGH)
+from .config import (MachineConfig, INTERLEAVE, PT_BIND_ALL, PT_BIND_HIGH,
+                     PT_FOLLOW_DATA)
 
 I32 = jnp.int32
 
@@ -117,3 +118,104 @@ def pt_prefs_for(pt_policy: jax.Array, level_is_upper: bool, thread: jax.Array,
     # Linux default: PT pages follow the data-page policy (paper section 3.2).
     prefs = jnp.where(bound, dram_prefs(thread, n_threads), data_prefs)
     return prefs, bound
+
+
+# Request layout of one page fault, in allocation (= serialization) order:
+# root, top and mid PT pages are "upper" levels (BHi-bound); the leaf PT
+# page is upper only under THP (the PMD *is* the leaf, paper section 6.6);
+# the data page comes last (request index 4).
+_LEVEL_IS_UPPER = (True, True, True, False)
+
+
+def alloc_many(node_free: jax.Array, node_reclaimable: jax.Array,
+               interleave_ptr: jax.Array, oom_killed: jax.Array,
+               wm: jax.Array, data_policy, pt_policy, n_threads: int,
+               thp: bool, need_pt: jax.Array, need_data: jax.Array):
+    """Batched fault allocator: hand out pages to a whole thread vector.
+
+    Reproduces the sequential thread-order semantics of
+    ``sim.phase_b_body`` bit-for-bit.  The only state that genuinely
+    chains through the per-thread fault loop is tiny — ``node_free[4]``,
+    ``node_reclaimable[4]``, the interleave cursor and the OOM latch — so
+    this runs a ``lax.scan`` over threads carrying just those ~10 scalars
+    (each thread's 5 requests unrolled inside the body), while every heavy
+    array update (PT placement scatters, TLB fills, counters) is left to
+    the caller to commit vectorized from the returned per-request results.
+
+    ``need_pt[T, 4]`` (root/top/mid/leaf) and ``need_data[T]`` are the
+    host-precomputed first-thread-wins request masks from
+    ``sim.fault_schedule``: threads faulting the same missing PT entry are
+    resolved to the earliest thread, exactly as zone-lock serialization
+    orders them in the sequential loop.  OOM gates at thread granularity:
+    a thread whose allocation fails latches ``oom`` and every *later*
+    thread goes inert, but the failing thread's own remaining requests
+    still run (matching ``_alloc_pt_level``, which never re-checks the
+    latch mid-fault).
+
+    Returns ``(nodes[T,5], slow[T,5], ok[T,5], act[T,5], gate[T],
+    node_free', node_reclaimable', interleave_ptr', oom')`` where ``act``
+    marks requests actually attempted and ``gate`` marks threads that were
+    not OOM-gated on entry.  ``ok`` is reported for *all* requests (it is
+    what the sequential path's cost model reads), committed effects only
+    for ``act & ok``.
+    """
+    data_policy = jnp.asarray(data_policy)
+    pt_policy = jnp.asarray(pt_policy)
+    is_follow = pt_policy == PT_FOLLOW_DATA
+    is_interleave = data_policy == INTERLEAVE
+    no_wm = jnp.asarray(False)
+
+    def body(carry, x):
+        free, rec, ptr, oom = carry
+        needs, need_d, t = x
+        gate = ~oom                     # thread-entry OOM gate
+        nodes, slows, oks, acts = [], [], [], []
+        for lvl in range(4):
+            is_upper = _LEVEL_IS_UPPER[lvl]
+            act = needs[lvl] & gate
+            dprefs = data_prefs_for(data_policy, t, n_threads, ptr)
+            prefs, ign = pt_prefs_for(pt_policy, is_upper, t, n_threads,
+                                      dprefs, thp)
+            node, slow, nf, nr, ok = alloc_one(free, rec, prefs, wm, ign)
+            if is_upper or thp:
+                # BHi falls back to the data policy when DRAM is exhausted
+                # (mirrors sim._alloc_pt_level: both allocations computed,
+                # the fallback selected per traced lane).
+                node2, slow2, nf2, nr2, ok2 = alloc_one(free, rec, dprefs,
+                                                        wm, no_wm)
+                is_bhi = pt_policy == PT_BIND_HIGH
+                use_fb = is_bhi & ~ok
+                node = jnp.where(use_fb, node2, node)
+                slow = jnp.where(use_fb, slow2, slow)
+                nf = jnp.where(use_fb, nf2, nf)
+                nr = jnp.where(use_fb, nr2, nr)
+                ok = ok | (is_bhi & ok2)
+            do = act & ok
+            free = jnp.where(do, nf, free)
+            rec = jnp.where(do, nr, rec)
+            ptr = ptr + (do & is_follow & is_interleave).astype(I32)
+            oom = oom | (act & ~ok)
+            nodes.append(node), slows.append(slow)
+            oks.append(ok), acts.append(act)
+
+        act_d = need_d & gate
+        dprefs = data_prefs_for(data_policy, t, n_threads, ptr)
+        node, slow, nf, nr, ok = alloc_one(free, rec, dprefs, wm, no_wm)
+        do = act_d & ok
+        free = jnp.where(do, nf, free)
+        rec = jnp.where(do, nr, rec)
+        ptr = ptr + (do & is_interleave).astype(I32)
+        oom = oom | (act_d & ~ok)
+        nodes.append(node), slows.append(slow)
+        oks.append(ok), acts.append(act_d)
+
+        y = (jnp.stack(nodes), jnp.stack(slows), jnp.stack(oks),
+             jnp.stack(acts), gate)
+        return (free, rec, ptr, oom), y
+
+    T = need_data.shape[0]
+    carry0 = (node_free, node_reclaimable, interleave_ptr, oom_killed)
+    xs = (need_pt, need_data, jnp.arange(T, dtype=I32))
+    (free, rec, ptr, oom), (nodes, slow, ok, act, gate) = \
+        jax.lax.scan(body, carry0, xs)
+    return nodes, slow, ok, act, gate, free, rec, ptr, oom

@@ -6,7 +6,18 @@ cycle totals to float32 rounding.  Every ordering rule of the JAX version is
 mirrored:
 
   * phase A (mapped accesses) uses the pre-step state for every thread;
-  * phase B (faults) runs threads in index order;
+  * phase B (faults) runs threads in index order — the serialization
+    contract the batched fault engine reproduces: the first thread to
+    touch a shared mapping granule (or missing PT entry) allocates it,
+    later same-step threads take the cheap "wait" path, and once an
+    allocation fails every later thread is OOM-gated.  Because mapped-ness
+    and PT-entry existence are policy-independent, that conflict structure
+    is exactly ``sim.fault_schedule``'s host-precomputed bits, and
+    :meth:`OracleSim.run` *asserts* the equivalence on the fly (pre-OOM,
+    when starting from a pristine address space — a chained second run
+    is pre-populated, where the schedule over-approximates by design):
+    phase A's miss set must equal the schedule's DO bits and the
+    real-fault/wait split must equal its WINNER bits;
   * TLB/PWC victim choice: ``argmin`` over LRU stamps with lowest-way
     tie-break, empty slots stamped -1;
   * AutoNUMA ordering via the same composite integer sort keys;
@@ -20,7 +31,7 @@ import numpy as np
 
 from .config import (CostConfig, MachineConfig, PolicyConfig, INTERLEAVE,
                      PT_BIND_ALL, PT_BIND_HIGH, PT_FOLLOW_DATA)
-from .sim import Trace
+from .sim import (SCHED_DO, SCHED_WINNER, Trace, fault_schedule)
 
 _MIX = (0x9E3779B1, 0x85EBCA77, 0xC2B2AE3D, 0x27D4EB2F)
 M32 = 0xFFFFFFFF
@@ -361,8 +372,17 @@ class OracleSim:
         seg_of_map = np.asarray(trace.seg_of_map)
         n_leaf = self.n_leaf
         seg_of_leaf = seg_of_map[(np.arange(n_leaf) << self.rb) % max(self.n_map, 1)]
+        # The host-precomputed fault schedule must predict this oracle's
+        # phase-B behavior exactly until the OOM latch fires (see module
+        # docstring); both assertions below enforce that equivalence.
+        # They only hold from a pristine address space — a chained
+        # second run() (resume-style) starts pre-populated, where the
+        # schedule deliberately over-approximates, so skip them then.
+        assert_schedule = self.step == 0
+        sched = fault_schedule(trace, self.mc)
 
         for s in range(trace.n_steps):
+            oom_at_step_start = self.oom
             fid = int(trace.free_seg[s])
             if fid >= 0:
                 self._free_segment(fid, seg_of_map, seg_of_leaf)
@@ -387,12 +407,20 @@ class OracleSim:
                     fault_mask[t] = True
                     continue
                 self._mapped_access(t, m, bool(w_row[t]), llc_rate)
+            if assert_schedule and not oom_at_step_start:
+                exp_do = (sched[s] & SCHED_DO) > 0
+                assert (fault_mask == exp_do).all(), \
+                    f"step {s}: fault_schedule DO bits diverge from oracle"
             # ---- phase B ------------------------------------------------
             for t in range(T):
                 if not fault_mask[t] or self.oom:
                     continue
                 va = int(va_row[t])
                 m = min(max(va >> shift, 0), self.n_map - 1)
+                assert not assert_schedule or \
+                    (self.data_node[m] < 0) == bool(sched[s, t]
+                                                    & SCHED_WINNER), \
+                    f"step {s} thread {t}: WINNER bit diverges from oracle"
                 self._fault(t, m)
             self.step += 1
 

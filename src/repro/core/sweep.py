@@ -32,8 +32,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from .config import CostConfig, MachineConfig, PolicyConfig
-from .sim import (RunResult, TIMELINE_KEYS, Trace, _build_step,
-                  fault_step_mask, scan_step_mask, seg_of_leaf_table)
+from .sim import (RunResult, SCHED_DO, TIMELINE_KEYS, Trace, _build_step,
+                  fault_schedule, scan_step_mask, seg_of_leaf_table)
 from .state import init_state
 
 I32 = jnp.int32
@@ -77,24 +77,27 @@ def _stack_leaves(objs):
     return jax.tree.map(stack, *objs)
 
 
-def _sweep_runner(mc: MachineConfig, budget: int):
-    key = (mc, budget)
+def _sweep_runner(mc: MachineConfig, budget: int, phase_b: str):
+    key = (mc, budget, phase_b)
     if key not in _SWEEP_CACHE:
-        step = _build_step(mc, budget)
+        step = _build_step(mc, budget, phase_b)
 
         @jax.jit
         def run_sweep(st, cc, pc, xs, seg_of_map, seg_of_leaf):
             def body(carry, x):
-                va_row, w_row, fid, llc, do_free, do_scan, has_fault = x
+                va_row, w_row, fid, llc, sched, do_free, do_scan, \
+                    has_fault = x
 
-                def lane(st1, cc1, pc1, va1, w1, fid1, llc1, sm, sl):
+                def lane(st1, cc1, pc1, va1, w1, fid1, llc1, sched1, sm, sl):
                     # the schedule predicates stay un-batched so the
-                    # step's lax.conds keep skipping work under vmap
+                    # step's lax.conds keep skipping work under vmap; the
+                    # per-thread fault-schedule row is per-lane (one per
+                    # trace) and rides the vmap like the va row
                     return step(st1, cc1, pc1,
-                                (va1, w1, fid1, llc1, do_free, do_scan,
-                                 has_fault), sm, sl)
+                                (va1, w1, fid1, llc1, sched1, do_free,
+                                 do_scan, has_fault), sm, sl)
                 return jax.vmap(lane)(carry, cc, pc, va_row, w_row, fid,
-                                      llc, seg_of_map, seg_of_leaf)
+                                      llc, sched, seg_of_map, seg_of_leaf)
             return jax.lax.scan(body, st, xs)
 
         _SWEEP_CACHE[key] = run_sweep
@@ -105,12 +108,16 @@ def sweep(mc: MachineConfig,
           cc: Union[CostConfig, Sequence[CostConfig]],
           policies: Sequence[PolicyConfig],
           traces: Union[Trace, Sequence[Trace]],
+          phase_b: str = "batched",
           ) -> Union[List[RunResult], List[List[RunResult]]]:
     """Run every (trace, policy) pair as one batched compiled scan.
 
     Returns a list of RunResults aligned with ``policies`` when ``traces``
     is a single Trace, else a list-of-lists indexed ``[trace][policy]``.
     ``cc`` may be a single CostConfig (shared) or one per policy.
+    ``phase_b`` selects the fault engine (see ``TieredMemSimulator``);
+    the default batched engine removes the per-thread ``lax.cond`` that
+    used to cost fault-dominated sweeps ~1.5x per vmap lane.
     """
     single = isinstance(traces, Trace)
     tr_list = [traces] if single else list(traces)
@@ -152,20 +159,22 @@ def sweep(mc: MachineConfig,
         return jnp.asarray(np.repeat(a, P, axis=1))
 
     S = shape[0]
+    scheds = [fault_schedule(tr, mc) for tr in tr_list]
     va = lane_rows([tr.va for tr in tr_list], np.int32)          # [S, L, T]
     wr = lane_rows([tr.is_write for tr in tr_list], bool)
     fid = lane_rows([tr.free_seg for tr in tr_list], np.int32)   # [S, L]
     llc = lane_rows([tr.llc for tr in tr_list], np.float32)
+    sched = lane_rows(scheds, np.uint8)                          # [S, L, T]
 
     do_free = np.zeros((S,), bool)
     has_fault = np.zeros((S,), bool)
-    for tr in tr_list:
+    for sc, tr in zip(scheds, tr_list):
         do_free |= np.asarray(tr.free_seg) >= 0
-        has_fault |= fault_step_mask(tr, mc)
+        has_fault |= (sc & SCHED_DO).any(axis=1)
     do_scan = scan_step_mask(S, period,
                              enabled=any(bool(p.autonuma) for p in policies))
-    xs = (va, wr, fid, llc, jnp.asarray(do_free), jnp.asarray(do_scan),
-          jnp.asarray(has_fault))
+    xs = (va, wr, fid, llc, sched, jnp.asarray(do_free),
+          jnp.asarray(do_scan), jnp.asarray(has_fault))
 
     seg_maps = np.stack([np.asarray(tr.seg_of_map, np.int32)
                          for tr in tr_list])                     # [M, n_map]
@@ -177,8 +186,8 @@ def sweep(mc: MachineConfig,
     st0 = jax.tree.map(lambda a: jnp.broadcast_to(a[None], (L,) + a.shape),
                        init_state(mc))
 
-    run_sweep = _sweep_runner(mc, budget)
-    _SIGNATURES.add((mc, budget, L, S))
+    run_sweep = _sweep_runner(mc, budget, phase_b)
+    _SIGNATURES.add((mc, budget, phase_b, L, S))
     final, outs = run_sweep(st0, lane_cc, lane_pc, xs, seg_of_map,
                             seg_of_leaf)
     final = jax.device_get(final)

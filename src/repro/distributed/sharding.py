@@ -43,6 +43,51 @@ DEFAULT_RULES: Dict[str, Optional[str]] = {
 }
 
 
+def make_mesh(axis_shapes, axis_names) -> Mesh:
+    """``jax.make_mesh`` across API drift.
+
+    Newer jax wants explicit ``axis_types`` (``jax.sharding.AxisType.Auto``)
+    to keep the pre-explicit-sharding behavior; releases that predate the
+    enum (e.g. 0.4.3x, which still provide ``jax.make_mesh`` itself) take
+    no such kwarg.  Tests and launch helpers go through here so both
+    worlds produce the same auto-sharded mesh.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(axis_shapes, axis_names,
+                                 axis_types=(axis_type.Auto,)
+                                 * len(axis_names))
+        except TypeError:
+            pass
+    return jax.make_mesh(axis_shapes, axis_names)
+
+
+def shard_map(f, mesh: Mesh, in_specs, out_specs, manual_axes):
+    """``shard_map`` across API drift.
+
+    Newer jax exposes ``jax.shard_map`` taking ``axis_names`` (the axes the
+    function is manual over) and ``check_vma``; older releases only have
+    ``jax.experimental.shard_map.shard_map`` with ``check_rep``, and their
+    partial-manual mode (non-empty ``auto``) trips an XLA
+    ``IsManualSubgroup`` check on CPU meshes — so the fallback goes manual
+    over *all* mesh axes, which is equivalent as long as callers keep
+    non-``manual_axes`` dimensions replicated in their specs (the
+    compressed train step does: params/outputs are ``P()`` and only DP
+    collectives appear in the body).
+    """
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        try:
+            return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=False, axis_names=set(manual_axes))
+        except TypeError:
+            pass
+    from jax.experimental.shard_map import shard_map as sm_old
+    return sm_old(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=False)
+
+
 def mesh_axis_size(mesh: Mesh, axis) -> int:
     if axis is None:
         return 1

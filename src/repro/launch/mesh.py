@@ -9,13 +9,13 @@ from __future__ import annotations
 
 import jax
 
+from ..distributed import sharding
+
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return sharding.make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 2, model: int = 4) -> jax.sharding.Mesh:
@@ -24,6 +24,4 @@ def make_host_mesh(data: int = 2, model: int = 4) -> jax.sharding.Mesh:
     data = min(data, max(n // model, 1))
     if data * model > n:
         model = n // data
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return sharding.make_mesh((data, model), ("data", "model"))

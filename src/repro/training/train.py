@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..configs.base import ArchConfig
+from ..distributed.sharding import shard_map
 from ..models import lm_loss
 from . import optimizer as opt_mod
 
@@ -188,9 +189,8 @@ def make_compressed_train_step(cfg: ArchConfig, tc: TrainConfig,
 
     batch_spec = P(dp_axes if len(dp_axes) > 1 else dp_axes[0])
     rep = P()
-    return jax.shard_map(
+    return shard_map(
         per_shard, mesh=mesh,
         in_specs=(rep, rep, batch_spec),
         out_specs=(rep, rep, rep),
-        check_vma=False,
-        axis_names=set(dp_axes))
+        manual_axes=dp_axes)

@@ -29,11 +29,9 @@ def run_sub(code: str, devices: int = 8):
 
 def test_spec_for_rules():
     import jax
-    import numpy as np
     from repro.distributed import sharding as sh
     # 1-device mesh: everything falls back to replication
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = sh.make_mesh((1, 1), ("data", "model"))
     s = ParamSpec((64, 128), ("embed", "ff"))
     assert sh.spec_for(s, mesh) == jax.sharding.PartitionSpec(None, None)
 
@@ -48,8 +46,7 @@ def test_train_step_on_mesh_fsdp_and_tp():
         from repro.training.train import TrainConfig, make_train_step
         from repro.data.pipeline import DataConfig, batch_at
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = sh.make_mesh((2, 4), ("data", "model"))
         cfg = configs.reduced(configs.get_config("qwen1.5-0.5b"))
         specs = param_specs(cfg)
         for rules in (sh.DEFAULT_RULES, sh.FSDP_RULES):
@@ -75,6 +72,7 @@ def test_compressed_train_step_matches_plain():
     run_sub("""
         import jax, jax.numpy as jnp, numpy as np
         from repro import configs
+        from repro.distributed import sharding as sh
         from repro.models import make_params
         from repro.training import optimizer as opt_mod
         from repro.training.train import (TrainConfig,
@@ -82,8 +80,7 @@ def test_compressed_train_step_matches_plain():
                                           make_train_step)
         from repro.data.pipeline import DataConfig, batch_at
 
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = sh.make_mesh((4, 2), ("data", "model"))
         cfg = configs.reduced(configs.get_config("qwen1.5-0.5b"))
         dc = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=8)
         batch = batch_at(dc, 0)
@@ -124,8 +121,7 @@ def test_elastic_checkpoint_restore_across_meshes():
         ckpt.save(d, 1, params)
 
         # restore onto a different mesh shape (elastic DP resize)
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = sh.make_mesh((4, 2), ("data", "model"))
         p_sh = sh.param_shardings(specs, mesh, sh.FSDP_RULES)
         example = jax.tree.map(
             lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
