@@ -1,0 +1,106 @@
+"""CXL what-if cost sweep: NVMM:DRAM latency ratios through ONE program.
+
+The paper's slow tier is Optane (reads 3x DRAM, writes 4x).  CXL-attached
+memory spans a wide latency band — roughly 1.5x (direct CXL DRAM) to 4x+
+(far/pooled memory) — and TPP-style placement studies hinge on exactly
+this ratio.  ``sweep()`` accepts one CostConfig per lane, so the whole
+ratio band x {interleave, interleave+BHi} grid (fig11's setting — the
+one where half the page table lands on the slow tier) is a single
+compiled device program; the grid is routed through the simulation service
+(``repro.service``) to dogfood the broker on a real consumer: every lane
+is an ordinary SimQuery, the shape bucket microbatches them, and
+re-running the sweep is answered from the result cache.
+
+Emits ``artifacts/bench/cost_sweep.json``: per ratio, both policies'
+cycle metrics plus BHi's improvement — showing how the PT-placement win
+grows with the slow tier's latency disadvantage.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from . import common
+from repro.core import (CostConfig, INTERLEAVE, PT_BIND_HIGH,
+                        PT_FOLLOW_DATA, PolicyConfig, TraceSpec,
+                        benchmark_machine)
+from repro.service import SimBroker, SimQuery
+
+RATIOS = (1.5, 2.0, 3.0, 4.0, 6.0, 8.0)
+
+
+def cost_for(ratio: float) -> CostConfig:
+    """Scale both NVMM latencies off DRAM by ``ratio`` (the paper's 3x/4x
+    Optane point corresponds to ratio=3.0 on reads with the write penalty
+    kept at 4/3 of the read one)."""
+    base = CostConfig()
+    return CostConfig(nvmm_read=int(base.dram_read * ratio),
+                      nvmm_write=int(base.dram_write * ratio * 4 / 3))
+
+
+def main(quick: bool = False):
+    # RSS must exceed DRAM (paper Table 1: ~2.7x) or the slow tier — and
+    # hence the swept ratio — never engages.  Quick mode shrinks the
+    # machine with the pressure ratio preserved.  The natural trace
+    # length lands exactly on a power of two so the broker's canonical
+    # padding adds no idle steps (populate = 1.5 * fp / T).
+    if quick:
+        mc = dataclasses.replace(benchmark_machine(), va_pages=1 << 13,
+                                 dram_pages_per_node=1200,
+                                 nvmm_pages_per_node=4800)
+        fp, run_steps = (1 << 13), 128
+    else:
+        mc = benchmark_machine()
+        fp, run_steps = common.FOOTPRINT, 4096
+    spec = TraceSpec(workload="memcached", footprint=fp,
+                     run_steps=run_steps)          # fp 2x+ over DRAM total
+    # fig11's setting: interleave spreads data AND (follow_data) PT pages
+    # round-robin over all four nodes, so half the table lands on the
+    # slow tier; BHi pulls the upper levels back to DRAM.  That is the
+    # placement delta whose value scales with the latency ratio.
+    policies = [
+        ("interleave", PolicyConfig(data_policy=INTERLEAVE,
+                                    pt_policy=PT_FOLLOW_DATA,
+                                    autonuma=False)),
+        ("interleave+BHi", PolicyConfig(data_policy=INTERLEAVE,
+                                        pt_policy=PT_BIND_HIGH,
+                                        autonuma=False)),
+    ]
+
+    broker = SimBroker(max_lanes=len(RATIOS) * len(policies),
+                       lane_sharding="auto")
+    queries = [SimQuery(trace=spec, policy=pc, cost=cost_for(r), machine=mc)
+               for r in RATIOS for _, pc in policies]
+
+    t0 = time.time()
+    res = broker.run(queries)
+    secs = time.time() - t0
+
+    results, rows = {}, []
+    for i, r in enumerate(RATIOS):
+        by_pol = {}
+        for j, (pname, _) in enumerate(policies):
+            m = res[i * len(policies) + j].summary()
+            by_pol[pname] = m
+        imp = common.improvement(by_pol["interleave"]["total_cycles"],
+                                 by_pol["interleave+BHi"]["total_cycles"])
+        walk_imp = common.improvement(
+            by_pol["interleave"]["walk_cycles"],
+            by_pol["interleave+BHi"]["walk_cycles"])
+        results[f"{r:g}x"] = {"policies": by_pol, "bhi_total_improv": imp,
+                              "bhi_walk_improv": walk_imp}
+        rows.append((
+            f"cost_sweep/{r:g}x", secs / len(RATIOS),
+            f"bhi_total_improv={imp:.2f}%;bhi_walk_improv={walk_imp:.2f}%;"
+            f"base_walk_share={by_pol['interleave']['walk_share']:.3f}"))
+    results["_meta"] = {
+        "footprint": fp, "run_steps": run_steps, "seconds": secs,
+        "broker_stats": broker.stats.as_dict(),
+    }
+    common.emit(rows)
+    common.save_artifact("cost_sweep", results)
+    return results
+
+
+if __name__ == "__main__":
+    main()

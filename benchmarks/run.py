@@ -1,10 +1,12 @@
 """Benchmark entry point: one module per paper table/figure + the Pillar-B
-serving benchmark + the roofline table.
+serving benchmark + the roofline table + the service-layer drivers.
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig9,fig10]
 
 Prints ``name,seconds,derived`` CSV rows (as the harness skeleton asks) and
-writes JSON artifacts under artifacts/bench/.
+writes JSON artifacts under artifacts/bench/.  ``--help`` lists every
+registered figure; an unknown ``--only`` target is an error, not a silent
+no-op.
 """
 from __future__ import annotations
 
@@ -13,35 +15,53 @@ import sys
 import time
 import traceback
 
+# name -> (module basename, one-line description); import is deferred so
+# --help and --only validation stay instant.
+FIGURES = {
+    "fig1": ("fig1_startup", "startup/populate-phase cost breakdown"),
+    "fig5": ("fig5_ptdist", "PT-page NUMA distribution"),
+    "fig6": ("fig6_walklat", "page-walk latency by PT placement"),
+    "fig7": ("fig7_bind", "bind-all OOM pathology vs BHi"),
+    "fig9": ("fig9_fullsystem", "full-system policy comparison"),
+    "fig10": ("fig10_multitenant", "multi-tenant fill-and-free scenario"),
+    "fig11": ("fig11_interleave", "interleaved data placement"),
+    "fig13": ("fig13_thp", "transparent huge pages"),
+    "table4": ("table4_summary", "headline geomean summary vs paper"),
+    "kv_tiering": ("kv_tiering", "tiered paged-KV serving benchmark"),
+    "roofline": ("roofline", "roofline over dry-run artifacts"),
+    "fault_batch": ("fault_batch", "batched fault-engine micro-benchmark"),
+    "cost_sweep": ("cost_sweep", "CXL what-if NVMM latency-ratio sweep"),
+    "service_throughput": ("service_throughput",
+                           "query-broker throughput vs naive execution"),
+}
+
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    figure_list = "\n".join(f"  {n:<20} {d}"
+                            for n, (_, d) in FIGURES.items())
+    ap = argparse.ArgumentParser(
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+        epilog=f"registered figures:\n{figure_list}")
     ap.add_argument("--quick", action="store_true",
                     help="2 workloads, short traces (CI-scale)")
     ap.add_argument("--only", default=None,
-                    help="comma-separated module subset, e.g. fig9,table4")
+                    help="comma-separated figure subset, e.g. fig9,table4 "
+                         "(see the registered list below)")
     args = ap.parse_args()
 
-    from . import (fault_batch, fig1_startup, fig5_ptdist, fig6_walklat,
-                   fig7_bind, fig9_fullsystem, fig10_multitenant,
-                   fig11_interleave, fig13_thp, kv_tiering, roofline,
-                   table4_summary)
-
-    modules = [
-        ("fig1", fig1_startup), ("fig5", fig5_ptdist),
-        ("fig6", fig6_walklat), ("fig7", fig7_bind),
-        ("fig9", fig9_fullsystem), ("fig10", fig10_multitenant),
-        ("fig11", fig11_interleave), ("fig13", fig13_thp),
-        ("table4", table4_summary), ("kv_tiering", kv_tiering),
-        ("roofline", roofline), ("fault_batch", fault_batch),
-    ]
+    names = list(FIGURES)
     if args.only:
-        keep = set(args.only.split(","))
-        modules = [(n, m) for n, m in modules if n in keep]
+        names = [n.strip() for n in args.only.split(",") if n.strip()]
+        unknown = [n for n in names if n not in FIGURES]
+        if unknown:
+            ap.error(f"unknown --only target(s) {', '.join(unknown)}; "
+                     f"registered: {', '.join(FIGURES)}")
 
+    import importlib
     print("name,seconds,derived", flush=True)
     failures = []
-    for name, mod in modules:
+    for name in names:
+        mod = importlib.import_module(f"benchmarks.{FIGURES[name][0]}")
         t0 = time.time()
         try:
             mod.main(quick=args.quick)

@@ -10,15 +10,17 @@ from .sim import (RunResult, TieredMemSimulator, Trace, fault_schedule,
                   fault_step_mask, pad_trace)
 from .state import SimState, init_state, is_dram, same_tier
 from .sweep import compile_count as sweep_compile_count
-from .sweep import stack_policies, sweep
+from .sweep import lane_mesh, stack_policies, sweep, sweep_lanes
+from .workloads import TraceSpec, trace_digest
 from . import workloads
 
 __all__ = [
     "CostConfig", "MachineConfig", "PolicyConfig", "FIRST_TOUCH",
     "INTERLEAVE", "PT_BIND_ALL", "PT_BIND_HIGH", "PT_FOLLOW_DATA",
     "benchmark_machine", "bhi", "bhi_mig", "bind_all", "linux_default",
-    "RunResult", "TieredMemSimulator", "Trace", "fault_schedule",
-    "fault_step_mask",
+    "RunResult", "TieredMemSimulator", "Trace", "TraceSpec",
+    "fault_schedule", "fault_step_mask", "lane_mesh",
     "pad_trace", "SimState", "init_state", "is_dram", "same_tier",
-    "stack_policies", "sweep", "sweep_compile_count", "workloads",
+    "stack_policies", "sweep", "sweep_compile_count", "sweep_lanes",
+    "trace_digest", "workloads",
 ]

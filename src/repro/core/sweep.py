@@ -9,10 +9,25 @@ simulator step (``sim._build_step``) over it, and runs the whole grid as a
 single compiled ``lax.scan`` — one compile per trace shape, one device
 program per figure.
 
+Two entry points share the engine:
+
+  * :func:`sweep` — the figure-style cross product: N policies × M traces.
+  * :func:`sweep_lanes` — one lane per independent ``(cost, policy,
+    trace)`` tuple.  This is the microbatch primitive of the simulation
+    service (``repro.service``): a broker bucketing arbitrary concurrent
+    queries by trace shape flushes each bucket through one call here.
+
+Lanes can additionally be sharded across devices (``lane_sharding`` —
+``jax.sharding`` over the lane axis): the state pytree and every per-lane
+input are placed with a ``PartitionSpec`` over a 1-D ``"lanes"`` mesh, so
+a policy grid spreads over all local devices with no change to the scan
+body.  On a single-device host the mesh degenerates and results are
+bit-identical to the unsharded path.
+
 Correctness contract: a sweep lane is bit-identical (placements, counters;
 cycles to float32 rounding) to the corresponding sequential
 ``TieredMemSimulator`` run and to the pure-Python ``core.ref`` oracle —
-``tests/test_sweep.py`` enforces both.
+``tests/test_sweep.py`` and ``tests/test_service.py`` enforce both.
 
 Constraints inherited from the step being compiled once for all lanes:
 
@@ -21,15 +36,19 @@ Constraints inherited from the step being compiled once for all lanes:
     schedule is a host-precomputed, lane-shared predicate so ``lax.cond``
     survives vmap);
   * the AutoNUMA ``top_k`` bound is the max ``autonuma_budget`` over the
-    swept policies; per-lane budgets gate through traced masks.
+    swept policies (or the explicit ``budget`` override, which may only
+    raise it); per-lane budgets gate through traced masks, so an
+    over-provisioned bound never changes results — brokers quantize it to
+    keep compile keys stable across bursts.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Sequence, Tuple, Union
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .config import CostConfig, MachineConfig, PolicyConfig
 from .sim import (RunResult, SCHED_DO, TIMELINE_KEYS, Trace, _build_step,
@@ -40,7 +59,7 @@ I32 = jnp.int32
 F32 = jnp.float32
 
 # One jitted vmapped scan per (machine, budget); jax's jit cache then holds
-# one executable per (lane count, trace shape).
+# one executable per (lane count, trace shape, lane sharding).
 _SWEEP_CACHE: Dict[Tuple, object] = {}
 # Fallback compile accounting for jax versions without the (private)
 # jit _cache_size API: one entry per distinct compiled signature.
@@ -48,12 +67,13 @@ _SIGNATURES = set()
 
 
 def compile_count() -> int:
-    """Number of XLA compilations performed by sweep() so far.
+    """Number of XLA compilations performed by sweep()/sweep_lanes() so far.
 
     Counts entries in the underlying jit caches (one per distinct
-    (machine, budget, lane-count, trace-shape) combination) — tests assert
-    a ≥4-policy sweep adds exactly one.  Falls back to sweep()'s own
-    signature accounting if the jit cache-size API is unavailable.
+    (machine, budget, lane-count, trace-shape, sharding) combination) —
+    tests assert a ≥4-policy sweep adds exactly one and that a
+    service-cache hit adds zero.  Falls back to the engine's own signature
+    accounting if the jit cache-size API is unavailable.
     """
     sizes = [getattr(fn, "_cache_size", None) for fn in _SWEEP_CACHE.values()]
     if all(s is not None for s in sizes):
@@ -104,27 +124,65 @@ def _sweep_runner(mc: MachineConfig, budget: int, phase_b: str):
     return _SWEEP_CACHE[key]
 
 
-def sweep(mc: MachineConfig,
-          cc: Union[CostConfig, Sequence[CostConfig]],
-          policies: Sequence[PolicyConfig],
-          traces: Union[Trace, Sequence[Trace]],
-          phase_b: str = "batched",
-          ) -> Union[List[RunResult], List[List[RunResult]]]:
-    """Run every (trace, policy) pair as one batched compiled scan.
+def lane_mesh(n_lanes: int, devices=None) -> Mesh:
+    """A 1-D ``"lanes"`` mesh over the largest device prefix dividing
+    ``n_lanes`` (every device on an evenly divisible lane count; one
+    device — the degenerate mesh — when nothing divides)."""
+    devices = list(jax.devices() if devices is None else devices)
+    n = len(devices)
+    while n > 1 and n_lanes % n:
+        n -= 1
+    return Mesh(np.asarray(devices[:n]), ("lanes",))
 
-    Returns a list of RunResults aligned with ``policies`` when ``traces``
-    is a single Trace, else a list-of-lists indexed ``[trace][policy]``.
-    ``cc`` may be a single CostConfig (shared) or one per policy.
-    ``phase_b`` selects the fault engine (see ``TieredMemSimulator``);
-    the default batched engine removes the per-thread ``lax.cond`` that
-    used to cost fault-dominated sweeps ~1.5x per vmap lane.
+
+def _resolve_lane_sharding(lane_sharding, n_lanes: int) -> Optional[Mesh]:
+    if lane_sharding is None:
+        return None
+    if lane_sharding == "auto":
+        return lane_mesh(n_lanes)
+    if isinstance(lane_sharding, Mesh):
+        if n_lanes % lane_sharding.devices.size:
+            raise ValueError(
+                f"{n_lanes} lanes not divisible by the {lane_sharding.devices.size}-"
+                "device lane mesh")
+        return lane_sharding
+    raise ValueError(f"lane_sharding must be None, 'auto' or a Mesh, got "
+                     f"{lane_sharding!r}")
+
+
+def sweep_lanes(mc: MachineConfig,
+                ccs: Sequence[CostConfig],
+                policies: Sequence[PolicyConfig],
+                traces: Sequence[Trace],
+                phase_b: str = "batched",
+                budget: Optional[int] = None,
+                lane_sharding=None,
+                ) -> List[RunResult]:
+    """Run L independent (cost, policy, trace) lanes as one batched scan.
+
+    The service-broker primitive: unlike :func:`sweep` there is no cross
+    product — lane ``i`` simulates ``traces[i]`` under ``policies[i]`` /
+    ``ccs[i]``.  All traces must share one ``[steps, threads]`` shape
+    (shape-bucketing is the caller's job; see ``repro.service.broker``).
+
+    ``budget`` (optional) raises the compiled AutoNUMA ``top_k`` bound
+    above the per-lane maximum so repeated calls with different policy
+    mixes reuse one executable; per-lane budgets still gate exactly.
+
+    ``lane_sharding`` — ``None`` (single device), ``"auto"`` (shard the
+    lane axis over every local device that divides the lane count), or an
+    explicit 1-D ``"lanes"`` :class:`jax.sharding.Mesh`.
     """
-    single = isinstance(traces, Trace)
-    tr_list = [traces] if single else list(traces)
     policies = list(policies)
-    P, M = len(policies), len(tr_list)
-    if P == 0 or M == 0:
-        raise ValueError("sweep needs at least one policy and one trace")
+    ccs = list(ccs)
+    tr_list = list(traces)
+    L = len(policies)
+    if L == 0:
+        raise ValueError("sweep_lanes needs at least one lane")
+    if not (len(ccs) == len(tr_list) == L):
+        raise ValueError(
+            f"lane lists disagree: {len(ccs)} costs, {L} policies, "
+            f"{len(tr_list)} traces")
 
     shape = tr_list[0].va.shape
     for tr in tr_list:
@@ -136,10 +194,6 @@ def sweep(mc: MachineConfig,
         raise ValueError(f"traces have {shape[1]} threads, machine has "
                          f"{mc.n_threads}")
 
-    ccs = list(cc) if isinstance(cc, (list, tuple)) else [cc] * P
-    if len(ccs) != P:
-        raise ValueError("need one CostConfig per policy (or a shared one)")
-
     periods = sorted({int(p.autonuma_period) for p in policies
                       if bool(p.autonuma)})
     if len(periods) > 1:
@@ -147,28 +201,45 @@ def sweep(mc: MachineConfig,
             f"swept policies must share autonuma_period, got {periods}; the "
             "scan schedule is lane-shared")
     period = periods[0] if periods else int(policies[0].autonuma_period)
-    budget = min(max(int(p.autonuma_budget) for p in policies), mc.n_map)
+    lane_budget = min(max(int(p.autonuma_budget) for p in policies),
+                      mc.n_map)
+    if budget is not None and budget < lane_budget:
+        raise ValueError(f"budget override {budget} below the lane maximum "
+                         f"{lane_budget}; a smaller top_k bound changes "
+                         "results")
+    eff_budget = min(budget if budget is not None else lane_budget, mc.n_map)
 
-    # Lane layout: trace-major, policy-minor (lane = trace_idx * P + pol_idx).
-    L = P * M
-    lane_pc = _stack_leaves([p for _ in range(M) for p in policies])
-    lane_cc = _stack_leaves([c for _ in range(M) for c in ccs])
+    lane_pc = _stack_leaves(policies)
+    lane_cc = _stack_leaves(ccs)
 
-    def lane_rows(per_trace, dtype):
-        a = np.stack([np.asarray(x, dtype) for x in per_trace], axis=1)
-        return jnp.asarray(np.repeat(a, P, axis=1))
+    # Host arrays are built per *unique trace object* and fanned out to
+    # lanes by index, so a bucket of queries sharing one trace pays one
+    # schedule pass and one stack.
+    uniq: Dict[int, int] = {}
+    uniq_traces: List[Trace] = []
+    lane_of = np.empty((L,), np.int64)
+    for i, tr in enumerate(tr_list):
+        j = uniq.setdefault(id(tr), len(uniq_traces))
+        if j == len(uniq_traces):
+            uniq_traces.append(tr)
+        lane_of[i] = j
 
     S = shape[0]
-    scheds = [fault_schedule(tr, mc) for tr in tr_list]
-    va = lane_rows([tr.va for tr in tr_list], np.int32)          # [S, L, T]
-    wr = lane_rows([tr.is_write for tr in tr_list], bool)
-    fid = lane_rows([tr.free_seg for tr in tr_list], np.int32)   # [S, L]
-    llc = lane_rows([tr.llc for tr in tr_list], np.float32)
-    sched = lane_rows(scheds, np.uint8)                          # [S, L, T]
+    scheds = [fault_schedule(tr, mc) for tr in uniq_traces]
+
+    def lanes(per_trace, dtype):
+        a = np.stack([np.asarray(x, dtype) for x in per_trace], axis=1)
+        return jnp.asarray(a[:, lane_of])
+
+    va = lanes([tr.va for tr in uniq_traces], np.int32)          # [S, L, T]
+    wr = lanes([tr.is_write for tr in uniq_traces], bool)
+    fid = lanes([tr.free_seg for tr in uniq_traces], np.int32)   # [S, L]
+    llc = lanes([tr.llc for tr in uniq_traces], np.float32)
+    sched = lanes(scheds, np.uint8)                              # [S, L, T]
 
     do_free = np.zeros((S,), bool)
     has_fault = np.zeros((S,), bool)
-    for sc, tr in zip(scheds, tr_list):
+    for sc, tr in zip(scheds, uniq_traces):
         do_free |= np.asarray(tr.free_seg) >= 0
         has_fault |= (sc & SCHED_DO).any(axis=1)
     do_scan = scan_step_mask(S, period,
@@ -177,32 +248,82 @@ def sweep(mc: MachineConfig,
           jnp.asarray(do_scan), jnp.asarray(has_fault))
 
     seg_maps = np.stack([np.asarray(tr.seg_of_map, np.int32)
-                         for tr in tr_list])                     # [M, n_map]
-    seg_of_map = jnp.asarray(np.repeat(seg_maps, P, axis=0))     # [L, n_map]
+                         for tr in uniq_traces])
+    seg_of_map = jnp.asarray(seg_maps[lane_of])                  # [L, n_map]
     seg_leafs = np.stack([np.asarray(seg_of_leaf_table(tr, mc))
-                          for tr in tr_list])                    # [M, n_leaf]
-    seg_of_leaf = jnp.asarray(np.repeat(seg_leafs, P, axis=0))
+                          for tr in uniq_traces])
+    seg_of_leaf = jnp.asarray(seg_leafs[lane_of])                # [L, n_leaf]
 
     st0 = jax.tree.map(lambda a: jnp.broadcast_to(a[None], (L,) + a.shape),
                        init_state(mc))
 
-    run_sweep = _sweep_runner(mc, budget, phase_b)
-    _SIGNATURES.add((mc, budget, phase_b, L, S))
+    mesh = _resolve_lane_sharding(lane_sharding, L)
+    shard_key = None
+    if mesh is not None:
+        shard_key = int(mesh.devices.size)
+        lane_sh = NamedSharding(mesh, P("lanes"))
+        row_sh = NamedSharding(mesh, P(None, "lanes"))
+        rep_sh = NamedSharding(mesh, P())
+        put = jax.device_put
+        st0 = jax.tree.map(lambda a: put(a, lane_sh), st0)
+        lane_cc = jax.tree.map(lambda a: put(a, lane_sh), lane_cc)
+        lane_pc = jax.tree.map(lambda a: put(a, lane_sh), lane_pc)
+        xs = tuple(put(x, row_sh if x.ndim > 1 else rep_sh) for x in xs)
+        seg_of_map = put(seg_of_map, lane_sh)
+        seg_of_leaf = put(seg_of_leaf, lane_sh)
+
+    run_sweep = _sweep_runner(mc, eff_budget, phase_b)
+    _SIGNATURES.add((mc, eff_budget, phase_b, L, S, shard_key))
     final, outs = run_sweep(st0, lane_cc, lane_pc, xs, seg_of_map,
                             seg_of_leaf)
     final = jax.device_get(final)
     outs = [np.asarray(o) for o in jax.device_get(outs)]
 
-    results: List[List[RunResult]] = []
-    for j, tr in enumerate(tr_list):
-        row = []
-        for i, pc in enumerate(policies):
-            lane_idx = j * P + i
-            st_lane = jax.tree.map(lambda a: a[lane_idx], final)
-            timeline = {k: v[:, lane_idx]
-                        for k, v in zip(TIMELINE_KEYS, outs)}
-            row.append(RunResult(final_state=st_lane, timeline=timeline,
+    results: List[RunResult] = []
+    for i, (pc, tr) in enumerate(zip(policies, tr_list)):
+        st_lane = jax.tree.map(lambda a: a[i], final)
+        timeline = {k: v[:, i] for k, v in zip(TIMELINE_KEYS, outs)}
+        results.append(RunResult(final_state=st_lane, timeline=timeline,
                                  trace_name=tr.name,
                                  policy_label=pc.label()))
-        results.append(row)
+    return results
+
+
+def sweep(mc: MachineConfig,
+          cc: Union[CostConfig, Sequence[CostConfig]],
+          policies: Sequence[PolicyConfig],
+          traces: Union[Trace, Sequence[Trace]],
+          phase_b: str = "batched",
+          budget: Optional[int] = None,
+          lane_sharding=None,
+          ) -> Union[List[RunResult], List[List[RunResult]]]:
+    """Run every (trace, policy) pair as one batched compiled scan.
+
+    Returns a list of RunResults aligned with ``policies`` when ``traces``
+    is a single Trace, else a list-of-lists indexed ``[trace][policy]``.
+    ``cc`` may be a single CostConfig (shared) or one per policy.
+    ``phase_b`` selects the fault engine (see ``TieredMemSimulator``);
+    the default batched engine removes the per-thread ``lax.cond`` that
+    used to cost fault-dominated sweeps ~1.5x per vmap lane.  ``budget``
+    and ``lane_sharding`` pass through to :func:`sweep_lanes`.
+    """
+    single = isinstance(traces, Trace)
+    tr_list = [traces] if single else list(traces)
+    policies = list(policies)
+    P_, M = len(policies), len(tr_list)
+    if P_ == 0 or M == 0:
+        raise ValueError("sweep needs at least one policy and one trace")
+
+    ccs = list(cc) if isinstance(cc, (list, tuple)) else [cc] * P_
+    if len(ccs) != P_:
+        raise ValueError("need one CostConfig per policy (or a shared one)")
+
+    # Lane layout: trace-major, policy-minor (lane = trace_idx * P + pol_idx).
+    flat = sweep_lanes(
+        mc,
+        [c for _ in range(M) for c in ccs],
+        [p for _ in range(M) for p in policies],
+        [tr for tr in tr_list for _ in range(P_)],
+        phase_b=phase_b, budget=budget, lane_sharding=lane_sharding)
+    results = [flat[j * P_:(j + 1) * P_] for j in range(M)]
     return results[0] if single else results

@@ -20,16 +20,26 @@ access patterns matching each application:
 
 All randomness is drawn from a seeded ``numpy.random.Generator`` — traces
 are plain input data, so the JAX/oracle equivalence is unaffected.
+
+Traces are also *spec-addressable*: a :class:`TraceSpec` names a generator,
+its parameters and an optional idle-pad length, builds deterministically
+for a given machine, and hashes stably — the simulation service
+(``repro.service``) keys admission buckets and its result cache on these
+digests, so two queries naming the same workload share one generation
+pass, one fault-schedule pass, and one cache line.  :func:`trace_digest`
+gives the matching content hash for ad-hoc ``Trace`` objects.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Optional
+import hashlib
+from typing import Optional, Tuple
 
 import numpy as np
 
 from .config import MachineConfig
-from .sim import Trace
+from .sim import Trace, pad_trace
 
 
 
@@ -175,15 +185,101 @@ def bfs(mc: MachineConfig, footprint: int, run_steps: int,
 
 
 ALL_WORKLOADS = {
-    "memcached": lambda mc, fp, rs, **kw: kv_store(mc, fp, rs, seed=0,
-                                                   name="memcached", **kw),
-    "redis": lambda mc, fp, rs, **kw: kv_store(mc, fp, rs, seed=10,
-                                               name="redis", **kw),
+    "memcached": lambda mc, fp, rs, seed=0, **kw: kv_store(
+        mc, fp, rs, seed=seed, name="memcached", **kw),
+    "redis": lambda mc, fp, rs, seed=10, **kw: kv_store(
+        mc, fp, rs, seed=seed, name="redis", **kw),
     "btree": btree,
     "hashjoin": hashjoin,
     "xsbench": xsbench,
     "bfs": bfs,
 }
+
+
+def trace_digest(tr: Trace) -> str:
+    """Stable content hash of a trace (name excluded — two differently
+    labelled but identical traces are the same simulation input).
+
+    Memoized on the (immutable-by-convention) Trace object, so a burst of
+    queries sharing one trace hashes its arrays once, not once per query.
+    """
+    cached = getattr(tr, "_content_digest", None)
+    if cached is not None:
+        return cached
+    h = hashlib.blake2b(digest_size=16)
+    for a in (np.asarray(tr.va, np.int32), np.asarray(tr.is_write, bool),
+              np.asarray(tr.free_seg, np.int32),
+              np.asarray(tr.llc, np.float32),
+              np.asarray(tr.seg_of_map, np.int32)):
+        h.update(str(a.shape).encode())
+        h.update(np.ascontiguousarray(a))
+    h.update(str(int(tr.populate_steps)).encode())
+    digest = h.hexdigest()
+    object.__setattr__(tr, "_content_digest", digest)   # frozen dataclass
+    return digest
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceSpec:
+    """Addressable recipe for a workload trace.
+
+    ``build(mc)`` is deterministic, so a spec (plus the machine) fully
+    identifies its trace without materializing it — service queries ship
+    specs, brokers build each distinct spec once (LRU-memoized here) and
+    key caches on ``digest(mc)``.
+
+    ``workload`` names an ``ALL_WORKLOADS`` generator; ``kwargs`` carries
+    extra generator keywords as a sorted tuple of pairs (hashable);
+    ``pad_to`` idle-pads the built trace (0 = natural length) so specs can
+    land in a shared shape bucket at build time.
+    """
+
+    workload: str
+    footprint: int
+    run_steps: int
+    seed: Optional[int] = None          # generator default when None
+    pad_to: int = 0
+    kwargs: Tuple[Tuple[str, object], ...] = ()
+
+    def __post_init__(self):
+        if self.workload not in ALL_WORKLOADS:
+            raise ValueError(f"unknown workload {self.workload!r}; known: "
+                             f"{sorted(ALL_WORKLOADS)}")
+        object.__setattr__(self, "kwargs", tuple(sorted(self.kwargs)))
+
+    def build(self, mc: MachineConfig) -> Trace:
+        key = (self, mc)
+        hit = _SPEC_CACHE.get(key)
+        if hit is not None:
+            _SPEC_CACHE.move_to_end(key)
+            return hit
+        kw = dict(self.kwargs)
+        if self.seed is not None:
+            kw["seed"] = self.seed
+        tr = ALL_WORKLOADS[self.workload](mc, self.footprint,
+                                          self.run_steps, **kw)
+        if self.pad_to:
+            tr = pad_trace(tr, self.pad_to)
+        _SPEC_CACHE[key] = tr
+        while len(_SPEC_CACHE) > _SPEC_CACHE_MAX:
+            _SPEC_CACHE.popitem(last=False)
+        return tr
+
+    def digest(self, mc: MachineConfig) -> str:
+        """Cache key without materializing: hash of the recipe + machine
+        shape knobs the generators read."""
+        h = hashlib.blake2b(digest_size=16)
+        h.update(repr((self.workload, self.footprint, self.run_steps,
+                       self.seed, self.pad_to, self.kwargs,
+                       mc)).encode())
+        return h.hexdigest()
+
+
+# Generated traces are FOOTPRINT-scale arrays; keep a bounded working set
+# (same LRU discipline as sim._SCHED_CACHE / benchmarks.common).
+_SPEC_CACHE: "collections.OrderedDict[tuple, Trace]" = \
+    collections.OrderedDict()
+_SPEC_CACHE_MAX = 32
 
 
 def multi_tenant(mc: MachineConfig, bench: str, bench_footprint: int,

@@ -70,20 +70,40 @@ def model_flops(cfg, shape) -> float:
     return 2.0 * n * shape.global_batch          # decode: one token per seq
 
 
-def policy_sweep_summary(mc, policies, trace, cc=None, baseline: int = 0):
-    """Ad-hoc policy comparison on one trace via the batched sweep engine.
+_BROKER = None
 
-    Runs every PolicyConfig in ``policies`` as one compiled batched scan
-    (``repro.core.sweep``) and returns ``{label: summary}`` where each
-    summary carries the simulator metrics plus ``improvement_pct`` of
-    ``total_cycles`` against the ``baseline``-indexed policy.  Imports the
-    simulator lazily so this module stays importable without touching jax
-    device state.
+
+def _default_broker():
+    """Shared simulation-service broker for analysis helpers (lazy: keeps
+    this module importable without touching jax device state)."""
+    global _BROKER
+    if _BROKER is None:
+        from repro.service import SimBroker
+        _BROKER = SimBroker(max_lanes=64, lane_sharding="auto")
+    return _BROKER
+
+
+def policy_sweep_summary(mc, policies, trace, cc=None, baseline: int = 0,
+                         broker=None):
+    """Ad-hoc policy comparison on one trace via the simulation service.
+
+    Every PolicyConfig in ``policies`` becomes a SimQuery against the
+    shared broker (``broker=None``), so grid regeneration microbatches
+    into per-bucket ``sweep_lanes`` programs, repeats are answered from
+    the content-addressed result cache, and — unlike a raw ``sweep()``
+    call — mixed AutoNUMA periods are legal (they just land in separate
+    buckets).  Returns ``{label: summary}`` where each summary carries
+    the simulator metrics plus ``improvement_pct`` of ``total_cycles``
+    against the ``baseline``-indexed policy.  Imports lazily so this
+    module stays importable without touching jax device state.
     """
-    from repro.core import CostConfig, sweep
+    from repro.core import CostConfig
+    from repro.service import SimQuery
 
-    results = sweep(mc, cc if cc is not None else CostConfig(), policies,
-                    trace)
+    broker = broker if broker is not None else _default_broker()
+    cc = cc if cc is not None else CostConfig()
+    results = broker.run([SimQuery(trace=trace, policy=pc, cost=cc,
+                                   machine=mc) for pc in policies])
     base_total = results[baseline].summary()["total_cycles"]
     out = {}
     for i, (pc, res) in enumerate(zip(policies, results)):

@@ -1,0 +1,35 @@
+"""Simulation-as-a-service: a shape-bucketed query broker over the
+batched sweep engine.
+
+The paper's evaluation — and the ROADMAP north star — is a large grid of
+(policy, cost-model, workload) what-if simulations.  ``repro.core.sweep``
+made one *hand-built* grid cheap; this package makes *arbitrary
+concurrent* scenario traffic cheap:
+
+  * :class:`SimQuery` — one independent question: a machine, a policy
+    bundle, a cost model, and a trace (by value or by
+    :class:`~repro.core.workloads.TraceSpec`), plus priority/deadline.
+  * :class:`SimBroker` — admission-queues queries, buckets them by
+    (machine, compiled-budget bound, trace shape), microbatches each
+    bucket into a single ``sweep_lanes`` call across the policy-lane
+    axis (optionally sharded over devices), and resolves per-query
+    futures.  A content-addressed result cache answers repeats with zero
+    XLA recompiles and zero device work.
+  * :mod:`repro.service.search` — a client-side search driver (grid +
+    successive halving over PolicyConfig space) that exercises the broker
+    the way an architecture-search harness would.
+
+``benchmarks/service_throughput.py`` measures the broker against naive
+per-query execution; ``tests/test_service.py`` pins bit-identical
+per-query results against direct sequential ``TieredMemSimulator`` runs.
+"""
+from .broker import BrokerStats, SimBroker
+from .cache import ResultCache
+from .query import SimFuture, SimQuery, query_cache_key, spec_cache_key
+from .search import grid_search, policy_grid, successive_halving
+
+__all__ = [
+    "BrokerStats", "SimBroker", "ResultCache", "SimFuture", "SimQuery",
+    "query_cache_key", "spec_cache_key", "grid_search", "policy_grid",
+    "successive_halving",
+]

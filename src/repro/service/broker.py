@@ -1,0 +1,301 @@
+"""The shape-bucketed simulation-query broker.
+
+Turns independent :class:`~repro.service.query.SimQuery` requests into a
+small number of batched ``sweep_lanes`` device programs:
+
+  admission   ``submit()`` canonicalizes the query's trace (specs build
+              once and idle-pad to a power-of-two step count), computes
+              its content-addressed cache key, answers repeats from the
+              result cache (zero recompiles, zero device work), joins
+              duplicates already in flight onto one lane, and otherwise
+              enqueues the query in its *bucket*.
+  bucketing   a bucket is everything that can share one compiled
+              executable: (machine, fault engine, trace step count,
+              AutoNUMA scan period).  The compiled AutoNUMA-budget
+              bound is computed per flush as the batch maximum rounded
+              up to a power of two — per-lane budgets gate through
+              traced masks, so the round-up never changes results, it
+              only keeps the compile key stable across bursts with
+              different policy mixes.
+  microbatch  a bucket flushes when it holds ``max_lanes`` lanes, when
+              its oldest query has waited ``max_wait`` broker-clock
+              seconds, when a member's deadline arrives (``pump``), or
+              when a caller forces a future (``result()``).  Lanes are
+              ordered by (priority, deadline, arrival) and the lane
+              count is padded to a power of two so recurring burst sizes
+              reuse one executable; pad lanes replicate lane 0 and are
+              discarded.
+  execution   one ``sweep_lanes`` call per flush — one lane per distinct
+              query, optionally sharded over devices
+              (``lane_sharding="auto"``) — then every future resolves
+              and every result enters the cache.
+
+The broker is synchronous and in-process: nothing runs until a bucket
+fills, comes due inside ``pump()``/``drain()``, or a future is forced.
+That keeps it deterministic (the test suite pins per-query results
+bit-identical to direct sequential ``TieredMemSimulator`` runs) while
+preserving the surface of an async service.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from ..core.sweep import compile_count as sweep_compile_count
+from ..core.sweep import sweep_lanes
+from ..core.config import MachineConfig
+from ..core.sim import RunResult, Trace
+from ..core.workloads import TraceSpec
+from .cache import ResultCache
+from .query import SimFuture, SimQuery, query_cache_key, spec_cache_key
+
+
+def _pow2ceil(n: int, floor: int = 1) -> int:
+    p = max(int(floor), 1)
+    while p < n:
+        p <<= 1
+    return p
+
+
+@dataclasses.dataclass
+class BrokerStats:
+    queries: int = 0
+    cache_hits: int = 0
+    inflight_joins: int = 0    # duplicate queries merged onto one lane
+    flushes: int = 0
+    lanes_run: int = 0         # distinct query lanes executed
+    pad_lanes: int = 0         # power-of-two padding lanes (discarded)
+    compiles: int = 0          # XLA compiles observed across flushes
+
+    def as_dict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+
+class _Pending:
+    """One future lane: a distinct (machine, engine, cost, policy, trace)
+    simulation plus every future waiting on it."""
+
+    __slots__ = ("key", "trace", "query", "futures", "enqueue_t")
+
+    def __init__(self, key, trace: Trace, query: SimQuery,
+                 enqueue_t: float):
+        self.key = key
+        self.trace = trace
+        self.query = query          # representative (first) query
+        self.futures: List[SimFuture] = []
+        self.enqueue_t = enqueue_t
+
+    @property
+    def priority(self) -> int:
+        return max(f.query.priority for f in self.futures)
+
+    @property
+    def deadline(self) -> float:
+        ds = [f.query.deadline for f in self.futures
+              if f.query.deadline is not None]
+        return min(ds) if ds else float("inf")
+
+
+class SimBroker:
+    """See module docstring.  Parameters:
+
+    max_lanes      microbatch capacity per bucket (flush-when-full).
+    max_wait       seconds a query may age in an open bucket before
+                   ``pump()`` flushes it (the max-wait microbatch flush).
+    lane_sharding  passed through to ``sweep_lanes`` — ``None``,
+                   ``"auto"`` (shard the lane axis over local devices),
+                   or an explicit 1-D ``"lanes"`` mesh.
+    pad_steps_floor  smallest power-of-two step count specs are padded
+                   to (raw ``Trace`` queries are never reshaped — the
+                   caller owns their shape and bucket).
+    cache / clock  injectable for sizing and for deterministic tests.
+    """
+
+    def __init__(self, max_lanes: int = 64, max_wait: float = 0.25,
+                 lane_sharding=None, pad_steps_floor: int = 64,
+                 cache: Optional[ResultCache] = None, clock=time.monotonic):
+        if max_lanes < 1:
+            raise ValueError("max_lanes must be >= 1")
+        self.max_lanes = max_lanes
+        self.max_wait = max_wait
+        self.lane_sharding = lane_sharding
+        self.pad_steps_floor = pad_steps_floor
+        self.cache = cache if cache is not None else ResultCache()
+        self.clock = clock
+        self.stats = BrokerStats()
+        # bucket key -> (cache key -> pending lane), insertion-ordered
+        self._buckets: Dict[Tuple, Dict[Tuple, _Pending]] = {}
+        self._fut_index: Dict[int, Tuple[Tuple, Tuple]] = {}
+
+    # ------------------------------------------------------------------
+    # admission
+    # ------------------------------------------------------------------
+    def canonical_trace(self, q: SimQuery) -> Trace:
+        """The exact trace a query simulates (what cache keys hash and
+        what a differential test must run sequentially)."""
+        if isinstance(q.trace, Trace):
+            if q.trace.va.shape[1] != q.machine.n_threads:
+                raise ValueError(
+                    f"query trace has {q.trace.va.shape[1]} threads, "
+                    f"machine has {q.machine.n_threads}")
+            return q.trace
+        spec = q.trace
+        if spec.pad_to == 0:
+            natural = spec.build(q.machine)       # memoized in workloads
+            spec = dataclasses.replace(
+                spec, pad_to=_pow2ceil(natural.n_steps,
+                                       self.pad_steps_floor))
+        return spec.build(q.machine)
+
+    def _bucket_key(self, q: SimQuery, canonical: Trace) -> Tuple:
+        mc: MachineConfig = q.machine
+        period = int(q.policy.autonuma_period) if bool(q.policy.autonuma) \
+            else 0
+        return (mc, q.phase_b, canonical.n_steps, period)
+
+    def submit(self, q: SimQuery) -> SimFuture:
+        self.stats.queries += 1
+        fut = SimFuture(q, self)
+        if isinstance(q.trace, TraceSpec):
+            # recipe-addressed: a hit skips trace generation entirely
+            key = spec_cache_key(q, self.pad_steps_floor)
+            canonical = None
+        else:
+            canonical = self.canonical_trace(q)
+            key = query_cache_key(q, canonical)
+        hit = self.cache.get(key)
+        if hit is not None:
+            self.stats.cache_hits += 1
+            fut._resolve(hit, from_cache=True)
+            return fut
+
+        if canonical is None:
+            canonical = self.canonical_trace(q)
+        bkey = self._bucket_key(q, canonical)
+        bucket = self._buckets.setdefault(bkey, {})
+        pend = bucket.get(key)
+        if pend is None:
+            pend = _Pending(key, canonical, q, self.clock())
+            bucket[key] = pend
+        else:
+            self.stats.inflight_joins += 1
+        pend.futures.append(fut)
+        self._fut_index[id(fut)] = (bkey, key)
+
+        if len(bucket) >= self.max_lanes:
+            self._flush(bkey)
+        else:
+            self.pump()
+        return fut
+
+    def submit_many(self, queries: Sequence[SimQuery]) -> List[SimFuture]:
+        return [self.submit(q) for q in queries]
+
+    def run(self, queries: Sequence[SimQuery]) -> List[RunResult]:
+        """Submit a burst, drain every bucket, return aligned results."""
+        futs = self.submit_many(queries)
+        self.drain()
+        return [f.result() for f in futs]
+
+    # ------------------------------------------------------------------
+    # scheduling
+    # ------------------------------------------------------------------
+    def _due(self, bucket: Dict[Tuple, _Pending], now: float) -> bool:
+        if not bucket:
+            return False
+        oldest = min(p.enqueue_t for p in bucket.values())
+        if now - oldest >= self.max_wait:
+            return True
+        return min(p.deadline for p in bucket.values()) <= now
+
+    def pump(self, now: Optional[float] = None) -> int:
+        """Flush every due bucket (max-wait age or deadline reached),
+        highest-priority bucket first.  Returns the number of flushes."""
+        now = self.clock() if now is None else now
+        due = [bk for bk, b in self._buckets.items() if self._due(b, now)]
+        due.sort(key=lambda bk: (
+            -max(p.priority for p in self._buckets[bk].values()),
+            min(p.enqueue_t for p in self._buckets[bk].values())))
+        n = 0
+        for bk in due:
+            while self._buckets.get(bk):
+                self._flush(bk)
+                n += 1
+        return n
+
+    def drain(self) -> None:
+        """Flush everything regardless of age/deadline."""
+        while any(self._buckets.values()):
+            for bk in list(self._buckets):
+                while self._buckets.get(bk):
+                    self._flush(bk)
+
+    def pending_lanes(self) -> int:
+        return sum(len(b) for b in self._buckets.values())
+
+    def _force(self, fut: SimFuture) -> None:
+        loc = self._fut_index.get(id(fut))
+        if loc is None:                      # already resolved
+            return
+        bkey, _ = loc
+        while not fut.done():
+            if not self._buckets.get(bkey):
+                raise RuntimeError(
+                    "future's bucket vanished without resolving it")
+            self._flush(bkey)
+
+    # ------------------------------------------------------------------
+    # execution
+    # ------------------------------------------------------------------
+    def _flush(self, bkey: Tuple) -> None:
+        bucket = self._buckets.get(bkey)
+        if not bucket:
+            self._buckets.pop(bkey, None)
+            return
+        pendings = sorted(
+            bucket.values(),
+            key=lambda p: (-p.priority, p.deadline, p.enqueue_t))
+        batch = pendings[:self.max_lanes]
+        for p in batch:
+            del bucket[p.key]
+        if not bucket:
+            del self._buckets[bkey]
+
+        mc, phase_b, _, _ = bkey
+        qbudget = _pow2ceil(min(
+            max(int(p.query.policy.autonuma_budget) for p in batch),
+            mc.n_map))
+        ccs = [p.query.cost for p in batch]
+        pcs = [p.query.policy for p in batch]
+        trs = [p.trace for p in batch]
+        n_pad = _pow2ceil(len(batch)) - len(batch)
+        for _ in range(n_pad):               # lane padding: replicate lane 0
+            ccs.append(batch[0].query.cost)
+            pcs.append(batch[0].query.policy)
+            trs.append(batch[0].trace)
+
+        before = sweep_compile_count()
+        try:
+            results = sweep_lanes(
+                mc, ccs, pcs, trs, phase_b=phase_b, budget=qbudget,
+                lane_sharding=self.lane_sharding)
+        except Exception as exc:
+            # a poisoned microbatch must not strand its futures: fail the
+            # whole batch (waiters raise instead of spinning) and let the
+            # flusher see the error too
+            for p in batch:
+                for f in p.futures:
+                    self._fut_index.pop(id(f), None)
+                    f._fail(exc)
+            raise
+        self.stats.compiles += sweep_compile_count() - before
+        self.stats.flushes += 1
+        self.stats.lanes_run += len(batch)
+        self.stats.pad_lanes += n_pad
+
+        for p, res in zip(batch, results):
+            self.cache.put(p.key, res)
+            for f in p.futures:
+                self._fut_index.pop(id(f), None)
+                f._resolve(res)

@@ -1,0 +1,49 @@
+"""Content-addressed, LRU-bounded result cache for the simulation service.
+
+Keys are :func:`repro.service.query.query_cache_key` tuples — machine +
+engine + every cost/policy leaf + the canonical trace digest (for
+spec-addressed queries, :func:`~repro.service.query.spec_cache_key`
+substitutes the recipe digest so hits skip generation too) — so a hit
+means "this exact simulation already ran" and is served with zero device
+work and zero XLA recompiles (``tests/test_service.py`` asserts the
+latter via ``sweep.compile_count()``).  Values are full
+:class:`~repro.core.sim.RunResult` pytrees (host-side numpy), shared by
+reference: results are treated as immutable by convention, like every
+other artifact of the functional simulator.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Optional, Tuple
+
+from ..core.sim import RunResult
+
+
+class ResultCache:
+    def __init__(self, max_entries: int = 512):
+        self._data: "collections.OrderedDict[Tuple, RunResult]" = \
+            collections.OrderedDict()
+        self.max_entries = max_entries
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def get(self, key: Tuple) -> Optional[RunResult]:
+        hit = self._data.get(key)
+        if hit is None:
+            self.misses += 1
+            return None
+        self._data.move_to_end(key)
+        self.hits += 1
+        return hit
+
+    def put(self, key: Tuple, value: RunResult) -> None:
+        self._data[key] = value
+        self._data.move_to_end(key)
+        while len(self._data) > self.max_entries:
+            self._data.popitem(last=False)
+
+    def clear(self) -> None:
+        self._data.clear()

@@ -4,8 +4,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis", reason="property tests need hypothesis")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                      # property tests skip; the rest run
+    HAVE_HYPOTHESIS = False
 
 from repro.memsys import tiered_kv as tkv
 
@@ -80,38 +83,121 @@ def test_immobile_tables_violate_invariant():
     assert int(tkv.table_invariant_violations(kv)) > 0
 
 
+def alive_usage(kv, n_seqs=3):
+    """(slot set, hot-used count, alive leaf ids) over live sequences."""
+    slots, leaves = [], []
+    for s in range(n_seqs):
+        t, sl = tkv.lookup_blocks(kv, jnp.asarray(s), MAXB)
+        for ti, si in zip(np.asarray(t), np.asarray(sl)):
+            if ti >= 0:
+                slots.append((int(ti), int(si)))
+        for lid in np.asarray(kv.upper[s]):
+            if lid >= 0:
+                leaves.append(int(lid))
+    return slots, leaves
+
+
 MAXB = 64          # covers every block a test sequence can grow to
 
 
-@settings(max_examples=30, deadline=None)
-@given(st.lists(st.tuples(st.integers(0, 2),          # seq id
-                          st.sampled_from(["append", "demote", "promote"])),
-                min_size=1, max_size=20))
-def test_property_invariant_and_freelists(ops):
+def run_interleaving(ops):
+    """Apply (seq, op) interleavings and check the Radiant invariant plus
+    full resource conservation: no slot double-allocated, no leaf table
+    page shared, every pool's used + free == capacity — sequences die
+    (release frees blocks AND leaf pages) and may be re-grown after."""
     kv = make_kv(n_hot=6, n_cold=64, n_seqs=3)
+    n_hot, n_cold = kv.hot_k.shape[1], kv.cold_k.shape[1]
+    n_leaf = kv.leaf_tier.shape[0]
     append = jax.jit(tkv.append_token)
     mig = jax.jit(tkv.migrate_sequence,
                   static_argnames=("to_tier", "max_blocks", "trigger_leaf"))
+    rel = jax.jit(tkv.release_sequence, static_argnames=("max_blocks",))
     for seq, op in ops:
         if op == "append":
             for _ in range(3):
                 kv = append(kv, jnp.asarray(seq), tok(1.0), tok(1.0))
         elif op == "demote":
             kv = mig(kv, jnp.asarray(seq), tkv.COLD, MAXB)
-        else:
+        elif op == "promote":
             kv = mig(kv, jnp.asarray(seq), tkv.HOT, MAXB)
-    # Radiant invariant: leaf tier agrees with children everywhere
+        else:
+            kv = rel(kv, jnp.asarray(seq), MAXB)
+
     assert int(tkv.table_invariant_violations(kv)) == 0
-    # allocator sanity: free tops within bounds, no double allocation
-    n_hot = kv.hot_k.shape[1]
-    tiers, slots = [], []
-    for s in range(3):
-        t, sl = tkv.lookup_blocks(kv, jnp.asarray(s), MAXB)
-        t, sl = np.asarray(t), np.asarray(sl)
-        for ti, si in zip(t, sl):
-            if ti >= 0:
-                tiers.append(ti)
-                slots.append((ti, si))
+    slots, leaves = alive_usage(kv)
     assert len(set(slots)) == len(slots), "double-allocated block slot"
-    n_hot_used = sum(1 for t, _ in slots if t == tkv.HOT)
-    assert n_hot_used + int(kv.hot_free_top) == n_hot
+    assert len(set(leaves)) == len(leaves), "leaf table page shared"
+    hot_used = sum(1 for t, _ in slots if t == tkv.HOT)
+    cold_used = sum(1 for t, _ in slots if t == tkv.COLD)
+    assert hot_used + int(kv.hot_free_top) == n_hot, \
+        "hot blocks leaked or double-freed across release interleavings"
+    assert cold_used + int(kv.cold_free_top) == n_cold
+    assert len(leaves) + int(kv.leaf_free_top) == n_leaf, \
+        "leaf table pages leaked or double-freed"
+
+
+OPS = ("append", "demote", "promote", "release")
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_random_interleavings_fixed_seeds(seed):
+    """Deterministic property-style coverage (runs without hypothesis):
+    seeded random append/migrate/release interleavings."""
+    rng = np.random.default_rng(seed)
+    ops = [(int(rng.integers(0, 3)), OPS[int(rng.integers(0, len(OPS)))])
+           for _ in range(20)]
+    run_interleaving(ops)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(st.lists(st.tuples(st.integers(0, 2),          # seq id
+                              st.sampled_from(["append", "demote",
+                                               "promote"])),
+                    min_size=1, max_size=20))
+    def test_property_invariant_and_freelists(ops):
+        run_interleaving(ops)
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(st.tuples(st.integers(0, 2), st.sampled_from(OPS)),
+                    min_size=1, max_size=24))
+    def test_property_invariant_with_release_interleavings(ops):
+        run_interleaving(ops)
+
+
+def test_eviction_under_pressure_then_release_refills_hot():
+    """The overload path end to end: a tenant overflows the hot pool
+    (cold-fallback 'eviction'), gets demoted wholesale under pressure,
+    a new tenant takes the freed hot space, and a final release returns
+    every resource."""
+    kv = make_kv(n_hot=2, n_cold=64)
+    n_leaf = kv.leaf_tier.shape[0]
+    append = jax.jit(tkv.append_token)
+    for t in range(4 * BS):                  # needs 4 blocks; only 2 hot
+        kv = append(kv, jnp.asarray(0), tok(float(t)), tok(float(t)))
+    assert int(kv.stats[tkv.STAT_FALLBACK]) == 2
+    assert int(kv.hot_free_top) == 0
+    assert int(tkv.table_invariant_violations(kv)) == 0
+
+    # memory pressure: demote the whole tenant; hot pool fully drains
+    kv = tkv.migrate_sequence(kv, jnp.asarray(0), tkv.COLD, MAXB)
+    assert int(kv.hot_free_top) == 2
+    assert int(tkv.table_invariant_violations(kv)) == 0
+    tier, _ = tkv.lookup_blocks(kv, jnp.asarray(0), 4)
+    assert all(np.asarray(tier) == tkv.COLD)
+
+    # the freed hot pool serves a new tenant immediately
+    for t in range(2 * BS):
+        kv = append(kv, jnp.asarray(1), tok(9.0), tok(9.0))
+    tier1, _ = tkv.lookup_blocks(kv, jnp.asarray(1), 2)
+    assert all(np.asarray(tier1) == tkv.HOT)
+    assert int(tkv.table_invariant_violations(kv)) == 0
+
+    # releases return every block and leaf page
+    kv = tkv.release_sequence(kv, jnp.asarray(0), MAXB)
+    kv = tkv.release_sequence(kv, jnp.asarray(1), MAXB)
+    assert int(kv.hot_free_top) == 2
+    assert int(kv.cold_free_top) == kv.cold_k.shape[1]
+    assert int(kv.leaf_free_top) == n_leaf
+    assert int(kv.seq_len[0]) == 0 and int(kv.seq_len[1]) == 0
+    assert int(tkv.table_invariant_violations(kv)) == 0
