@@ -30,6 +30,8 @@ FIGURES = {
     "kv_tiering": ("kv_tiering", "tiered paged-KV serving benchmark"),
     "roofline": ("roofline", "roofline over dry-run artifacts"),
     "fault_batch": ("fault_batch", "batched fault-engine micro-benchmark"),
+    "steady_state": ("steady_state",
+                     "time-blocked steady-state stepper micro-benchmark"),
     "cost_sweep": ("cost_sweep", "CXL what-if NVMM latency-ratio sweep"),
     "service_throughput": ("service_throughput",
                            "query-broker throughput vs naive execution"),

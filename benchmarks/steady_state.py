@@ -1,0 +1,85 @@
+"""Steady-state stepper micro-benchmark (perf-trajectory tracker).
+
+The paper's point — and the ROADMAP's standing ~2x item — is that the
+*steady-state* hot path (TLB lookups and page walks, no faults) dominates
+big-memory workloads.  This driver measures warm steps/sec of the
+time-blocked engine (``engine="blocked"``: event-free step windows run as
+one scan step, see ``core/sim.py``) against the retained per-step
+reference, on a steady-state-dominated trace at 1 lane and an 8-lane
+vmapped policy sweep, plus an AutoNUMA-cadence variant (a scan tick every
+``autonuma_period`` steps turns one window in ``period/block`` into an
+event window — the realistic lower bound on the win).  Writes
+``artifacts/bench/steady_state.json``; the acceptance bar is >= 2x on the
+8-lane steady-state sweep (measured ~6-7x on the benchmark machine, ~2x
+with the AutoNUMA cadence on), and both engines stay bit-identical
+(``tests/test_blocked.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from . import common
+from .fault_batch import _timed, eight_policies
+from repro.core import (CostConfig, TieredMemSimulator, sweep,
+                        benchmark_machine, workloads)
+
+
+def autonuma_policies():
+    return [dataclasses.replace(p, autonuma=True, autonuma_period=512,
+                                autonuma_budget=256)
+            for p in eight_policies()]
+
+
+def bench_trace(mc, tr, pols, cc):
+    out = {"steps": tr.n_steps, "populate_steps": tr.populate_steps}
+    for lanes, label in ((1, "1lane"), (len(pols), f"{len(pols)}lane")):
+        row = {}
+        for engine in ("per_step", "blocked"):
+            if lanes == 1:
+                sim = TieredMemSimulator(mc=mc, cc=cc, pc=pols[0],
+                                         engine=engine)
+                secs = _timed(lambda: sim.run(tr))
+            else:
+                secs = _timed(lambda: sweep(mc, cc, pols, tr, engine=engine))
+            row[engine] = {"seconds": secs,
+                           "lane_steps_per_sec": tr.n_steps * lanes / secs}
+        row["speedup"] = (row["blocked"]["lane_steps_per_sec"]
+                          / row["per_step"]["lane_steps_per_sec"])
+        out[label] = row
+    return out
+
+
+def main(quick: bool = False):
+    mc = benchmark_machine()
+    cc = CostConfig()
+    pols = eight_policies()
+    steady_steps = 1024 if quick else 2048
+
+    # steady-state: short populate, long zipfian run phase, no scan ticks
+    tr_run = workloads.kv_store(mc, 1 << 12, run_steps=steady_steps,
+                                seed=10, name="steady")
+
+    results = {"steady": bench_trace(mc, tr_run, pols, cc)}
+    if not quick:
+        # the same trace under an AutoNUMA cadence: one event window per
+        # period/block — the realistic lower bound on the blocked win
+        results["steady_autonuma"] = bench_trace(mc, tr_run,
+                                                 autonuma_policies(), cc)
+
+    rows = []
+    for phase, res in results.items():
+        for label in ("1lane", f"{len(pols)}lane"):
+            r = res[label]
+            rows.append((
+                f"steady_state/{phase}/{label}",
+                r["blocked"]["seconds"],
+                f"speedup={r['speedup']:.2f}x;"
+                f"blocked_sps={r['blocked']['lane_steps_per_sec']:.0f};"
+                f"per_step_sps={r['per_step']['lane_steps_per_sec']:.0f}"))
+    common.emit(rows)
+    common.save_artifact("steady_state", results)
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -130,7 +130,8 @@ _LEVEL_IS_UPPER = (True, True, True, False)
 def alloc_many(node_free: jax.Array, node_reclaimable: jax.Array,
                interleave_ptr: jax.Array, oom_killed: jax.Array,
                wm: jax.Array, data_policy, pt_policy, n_threads: int,
-               thp: bool, need_pt: jax.Array, need_data: jax.Array):
+               thp: bool, need_pt: jax.Array, need_data: jax.Array,
+               slot_thread=None):
     """Batched fault allocator: hand out pages to a whole thread vector.
 
     Reproduces the sequential thread-order semantics of
@@ -158,6 +159,21 @@ def alloc_many(node_free: jax.Array, node_reclaimable: jax.Array,
     not OOM-gated on entry.  ``ok`` is reported for *all* requests (it is
     what the sequential path's cost model reads), committed effects only
     for ``act & ok``.
+
+    ``slot_thread`` (optional, i32[G] — ``n_threads`` marks a pad slot)
+    compacts the serialized scan into *conflict groups*: a thread with no
+    requests is the identity on the allocator carry and commutes with
+    everything, so only the at-most-G allocating threads (the host
+    schedule's WINNER bits, ``sim.fault_group_bound``) need a scan slot —
+    each group is one allocating thread plus the silent threads behind
+    it.  The scan runs over the G slots in thread order and results
+    scatter back to the thread axis; per-thread OOM gates are
+    reconstructed from the winners' failure prefix, which is exactly the
+    thread-order latch (only allocating threads can trip it).  Requests
+    from threads without a slot would be dropped — callers guarantee
+    every requesting thread carries a WINNER bit (device winners are a
+    subset of host winners).  ``None`` keeps the full ``n_threads``-deep
+    scan; both paths are bit-identical.
     """
     data_policy = jnp.asarray(data_policy)
     pt_policy = jnp.asarray(pt_policy)
@@ -215,7 +231,30 @@ def alloc_many(node_free: jax.Array, node_reclaimable: jax.Array,
 
     T = need_data.shape[0]
     carry0 = (node_free, node_reclaimable, interleave_ptr, oom_killed)
-    xs = (need_pt, need_data, jnp.arange(T, dtype=I32))
-    (free, rec, ptr, oom), (nodes, slow, ok, act, gate) = \
-        jax.lax.scan(body, carry0, xs)
+    if slot_thread is None:
+        xs = (need_pt, need_data, jnp.arange(T, dtype=I32))
+        (free, rec, ptr, oom), (nodes, slow, ok, act, gate) = \
+            jax.lax.scan(body, carry0, xs)
+        return nodes, slow, ok, act, gate, free, rec, ptr, oom
+
+    # Conflict-group compaction: gather the allocating threads' requests
+    # into the G slots, scan those, scatter results back.
+    pad = slot_thread >= T
+    safe_t = jnp.where(pad, 0, slot_thread).astype(I32)
+    needs_g = jnp.where(pad[:, None], False, need_pt[safe_t])
+    need_d_g = jnp.where(pad, False, need_data[safe_t])
+    (free, rec, ptr, oom), (nodes_g, slow_g, ok_g, act_g, _gate_g) = \
+        jax.lax.scan(body, carry0, (needs_g, need_d_g, safe_t))
+
+    tgt = jnp.where(pad, T, slot_thread)           # route pads out of range
+    nodes = jnp.full((T, 5), -1, I32).at[tgt].set(nodes_g, mode="drop")
+    slow = jnp.zeros((T, 5), bool).at[tgt].set(slow_g, mode="drop")
+    ok = jnp.zeros((T, 5), bool).at[tgt].set(ok_g, mode="drop")
+    act = jnp.zeros((T, 5), bool).at[tgt].set(act_g, mode="drop")
+    # Thread-order OOM gate: a thread is gated iff the latch was set on
+    # entry or any allocating thread BEFORE it failed a request.
+    fail_g = jnp.any(act_g & ~ok_g, axis=1)
+    fail_t = jnp.zeros((T,), bool).at[tgt].set(fail_g, mode="drop")
+    prefix = jnp.cumsum(fail_t.astype(I32)) - fail_t.astype(I32)
+    gate = ~oom_killed & (prefix == 0)
     return nodes, slow, ok, act, gate, free, rec, ptr, oom

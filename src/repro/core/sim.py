@@ -58,6 +58,29 @@ this step", "the AutoNUMA scan fires", "some thread faults" — are
 precomputed host-side from the trace, as is the per-(step, thread) fault
 schedule that drives batched phase B (see :func:`fault_schedule` /
 :func:`fault_step_mask`).
+
+Time-blocked execution (``engine="blocked"``, the default): the paper's
+steady-state hot path — TLB lookups and page walks on long fault-free,
+scan-free stretches — used to pay the full per-step scan machinery (big
+placement/counter state threaded through every iteration, the three
+``lax.cond`` dispatches, fifteen per-step timeline reductions).  The
+blocked engine tiles the trace into fixed ``[block, T]`` step-windows
+(window count ``ceil(S / block)`` depends only on the trace *shape*, so
+compiled programs keep quantizing across trace contents — the property
+the service broker's shape buckets rely on).  A window containing any
+event step (segment free, AutoNUMA tick, or a fault on any lane of a
+sweep) replays the exact per-step path row by row; an event-free window
+runs as ONE outer-scan step: only the genuinely sequential state — the
+four TLB/PWC arrays, the per-thread cycle accumulators and three hit
+counters — threads through a tiny inner scan over the window's rows,
+while placement gathers, Bernoulli draws and cost terms are precomputed
+vectorized over the whole ``[block, T]`` tile and everything heavy
+(access-bit scatter, counters, the big state carry, timeline reductions)
+commits once per window.  The inner scan replays the per-step f32
+expression tree in the per-step order, so the blocked engine is
+**bit-identical** to the retained per-step path (``engine="per_step"``)
+— cycles included, not just to rounding — which ``tests/test_blocked.py``
+asserts exactly.
 """
 from __future__ import annotations
 
@@ -264,6 +287,38 @@ def scan_step_mask(n_steps: int, period: int, enabled: bool = True,
     return (s > 0) & (s % max(int(period), 1) == 0) & bool(enabled)
 
 
+def pow2ceil(n: int, floor: int = 1) -> int:
+    """Smallest power of two >= max(n, floor)."""
+    p = max(int(floor), 1)
+    while p < n:
+        p <<= 1
+    return p
+
+
+# Step-window size of the time-blocked engine.  Fixed per compile; the
+# window count ceil(S / block) depends only on the trace shape, never its
+# content, so executables keep quantizing across trace mixes.
+DEFAULT_BLOCK = 64
+
+
+def fault_group_bound(sched: np.ndarray) -> int:
+    """Max winners (allocating threads) in any single step of a schedule.
+
+    This bounds the conflict-group count of ``alloc.alloc_many``'s
+    serialized allocator scan: every thread that touches the allocator in
+    a step carries the WINNER bit, and threads without requests commute
+    with everything, so the per-step scan depth collapses from
+    ``n_threads`` to this bound (each group = one allocating thread plus
+    the non-allocating threads behind it).  Device-side winners are a
+    subset of the host bits (resume masking), so the bound is safe for
+    resumed states too.
+    """
+    if sched.size == 0:
+        return 1
+    w = (sched & SCHED_WINNER) > 0
+    return max(int(w.sum(axis=1).max()), 1)
+
+
 @dataclasses.dataclass
 class RunResult:
     final_state: SimState          # host-side pytree of numpy arrays
@@ -320,19 +375,26 @@ TIMELINE_KEYS = ("total_cycles", "walk_cycles", "stall_cycles", "faults",
                  "data_mem_cycles", "fault_cycles", "l1_hits", "stlb_hits")
 
 
-def _build_step(mc: MachineConfig, budget: int, phase_b: str = "batched"):
+def _build_step(mc: MachineConfig, budget: int, phase_b: str = "batched",
+                group: Optional[int] = None):
     """Build the policy-generic simulator step.
 
-    Only MachineConfig shapes, the AutoNUMA candidate bound ``budget`` and
-    the ``phase_b`` engine choice are baked into the compile; every
-    CostConfig/PolicyConfig value arrives per call as a traced leaf of the
-    ``cc``/``pc`` pytrees.  One compiled step therefore serves every
-    policy bundle — and vmaps over a leading policy axis for batched
-    sweeps (``core.sweep``).
+    Only MachineConfig shapes, the AutoNUMA candidate bound ``budget``,
+    the ``phase_b`` engine choice and the allocator conflict-group bound
+    ``group`` are baked into the compile; every CostConfig/PolicyConfig
+    value arrives per call as a traced leaf of the ``cc``/``pc`` pytrees.
+    One compiled step therefore serves every policy bundle — and vmaps
+    over a leading policy axis for batched sweeps (``core.sweep``).
 
     ``phase_b="batched"`` (default) uses the conflict-aware vectorized
     fault engine; ``"sequential"`` keeps the historical per-thread
     ``fori_loop``, retained as the differential-testing reference.
+
+    ``group`` (``fault_group_bound``, power-of-two-quantized by callers
+    so compile keys stay stable) caps the number of allocating threads
+    per step and lets ``alloc.alloc_many`` compact its serialized
+    allocator scan from ``n_threads`` to that many conflict-group slots;
+    ``None`` keeps the full-depth scan.
     """
     assert phase_b in ("batched", "sequential"), phase_b
     T = mc.n_threads
@@ -617,11 +679,26 @@ def _build_step(mc: MachineConfig, budget: int, phase_b: str = "batched"):
             need_cols.append(cand & (first[idx] == tid))
         need_pt = jnp.stack(need_cols, axis=-1)                 # bool[T, 4]
 
+        # Conflict-group compaction of the allocator scan: only host
+        # WINNER threads ever touch the allocator carry (everyone else is
+        # the identity and commutes), so the serialized scan runs over
+        # ``group`` winner slots instead of all T threads.  Slot ids are
+        # the host schedule's winner prefix count; device-side winners
+        # (masked by phase A on resume) are a subset of the host bits, so
+        # every requesting thread owns a slot.
+        if group is not None:
+            host_w = (sched_row & SCHED_WINNER) > 0
+            slot = jnp.cumsum(host_w.astype(I32)) - 1
+            slot_thread = jnp.full((group,), T, I32).at[
+                jnp.where(host_w & (slot < group), slot, group)].set(
+                    tid, mode="drop")
+        else:
+            slot_thread = None
         nodes, slow, ok, act, gate, nfree, nrec, ptr, oom = \
             alloc_mod.alloc_many(st.node_free, st.node_reclaimable,
                                  st.interleave_ptr, st.oom_killed, wm,
                                  pc.data_policy, pc.pt_policy, T, thp,
-                                 need_pt, winner)
+                                 need_pt, winner, slot_thread=slot_thread)
         fault = winner & gate          # threads that run the fault handler
         wait = do & ~winner & gate     # an earlier thread mapped m this step
         handled = wait | fault
@@ -743,7 +820,7 @@ def _build_step(mc: MachineConfig, budget: int, phase_b: str = "batched"):
     def step(st: SimState, cc: CostConfig, pc: PolicyConfig, x,
              seg_of_map, seg_of_leaf):
         va_row, w_row, fid, llc_rate, sched_row, do_free, do_scan, \
-            has_fault = x
+            has_fault, valid = x
         st = jax.lax.cond(do_free,
                           lambda s: free_segment(s, fid, seg_of_map, seg_of_leaf),
                           lambda s: s, st)
@@ -774,7 +851,10 @@ def _build_step(mc: MachineConfig, budget: int, phase_b: str = "batched"):
         # faults are bursty (populate) or rare (steady state): skip the
         # fault engine entirely on fault-free steps
         st = jax.lax.cond(has_fault, run_phase_b, lambda s: s, st)
-        st = dataclasses.replace(st, step=st.step + 1)
+        # idle pad rows of a time-blocked window carry valid=False and
+        # must not advance the step clock (it stamps TLB LRU and bern)
+        st = dataclasses.replace(
+            st, step=st.step + jnp.asarray(valid).astype(I32))
 
         out = (jnp.sum(st.cycles.total), jnp.sum(st.cycles.walk),
                jnp.sum(st.cycles.stall), st.counters.faults,
@@ -790,23 +870,223 @@ def _build_step(mc: MachineConfig, budget: int, phase_b: str = "batched"):
     return step
 
 
-def _compiled_run(mc: MachineConfig, budget: int, phase_b: str = "batched"):
-    """One jitted scan-over-steps per (machine shape, AutoNUMA bound,
-    phase-B engine).
+def _build_fast_window(mc: MachineConfig):
+    """Build the event-free-window executor of the time-blocked engine.
+
+    Executes a ``[block, T]`` tile of steps with no segment frees, no
+    AutoNUMA ticks and no faults as one scan step.  Placement arrays are
+    constant across such a tile (only phase B, frees and migrations move
+    them), so every gather, Bernoulli draw and latency term is
+    precomputed vectorized over the whole tile; the inner ``lax.scan``
+    threads only the genuinely sequential state — the four TLB/PWC
+    structures (LRU contents chain step to step), the per-thread f32
+    cycle accumulators and the three hit counters the timeline reports —
+    and replays the per-step cost expressions in per-step order, so the
+    result is bit-identical to running ``phase_a`` row by row (cycles
+    included, not just to f32 rounding).
+
+    Mapped-ness needs no check: a window is only event-free when no
+    thread touches a host-unmapped page, and host-mapped is a subset of
+    device-mapped (resume masking, ``fault_schedule``), so every active
+    access hits a mapped page exactly as the per-step path would see it.
+    """
+    T = mc.n_threads
+    shift = mc.map_shift
+    n_map = mc.n_map
+    rb = mc.radix_bits
+    thp = mc.page_order > 0
+
+    def f32(v):
+        return jnp.asarray(v, F32)
+
+    def read_lat(cc, node):
+        return jnp.where(is_dram(node), f32(cc.dram_read),
+                         f32(cc.nvmm_read))
+
+    def write_lat(cc, node):
+        return jnp.where(is_dram(node), f32(cc.dram_write),
+                         f32(cc.nvmm_write))
+
+    def fast_window(st: SimState, cc: CostConfig, va_blk, wr_blk, llc_blk,
+                    valid_blk):
+        B = va_blk.shape[0]
+        m = jnp.clip(jnp.where(va_blk >= 0, va_blk >> shift, 0), 0,
+                     n_map - 1)
+        tid = jnp.arange(T, dtype=I32)
+        active = (va_blk >= 0) & valid_blk[:, None] & ~st.oom_killed
+        now_rows = st.step + jnp.arange(B, dtype=I32)
+        nowc = now_rows[:, None]
+
+        leaf_id, mid_id = m >> rb, m >> (2 * rb)
+        top_id = m >> (3 * rb)
+        leaf_n = jnp.take(st.leaf_node, leaf_id)
+        mid_n = jnp.take(st.mid_node,
+                         jnp.clip(mid_id, 0, st.mid_node.shape[0] - 1))
+        top_n = jnp.take(st.top_node,
+                         jnp.clip(top_id, 0, st.top_node.shape[0] - 1))
+        data_n = jnp.take(st.data_node, m)
+
+        leaf_llc = bern(cc.leaf_llc_hit, 1, m, nowc, tid)
+        up1_llc = bern(cc.upper_llc_hit, 2, mid_id, nowc, tid)
+        up2_llc = bern(cc.upper_llc_hit, 3, top_id, nowc, tid)
+        data_llc = bern(llc_blk[:, None], 4, m, nowc, tid)
+
+        # Latency terms that don't depend on the TLB outcome — selected
+        # (never summed) until the inner scan, so f32 bits match phase_a.
+        leaf_read = jnp.where(leaf_llc, f32(cc.llc_hit),
+                              read_lat(cc, leaf_n))
+        mid_read_miss = jnp.where(up1_llc, f32(cc.llc_hit),
+                                  read_lat(cc, mid_n))
+        top_read_miss = jnp.where(up2_llc, f32(cc.llc_hit),
+                                  read_lat(cc, top_n))
+        mem_lat = jnp.where(wr_blk, write_lat(cc, data_n),
+                            read_lat(cc, data_n))
+        data_cost = jnp.where(active, jnp.where(data_llc, f32(cc.llc_hit),
+                                                mem_lat), 0.0)
+        zerosT = jnp.zeros((T,), F32)
+
+        def row(carry, xr):
+            (l1, stlb_c, pde, pdpte, ct, cwk, cst, cdm,
+             n_l1, n_stlb, n_walk, n_wmr) = carry
+            (m_r, act_r, now_s, leaf_r, mid_r, lread_r, mread_r, tread_r,
+             dcost_r, leaf_llc_r, up1_r, up2_r) = xr
+            hit1, way1 = tlbs.lookup(l1, m_r)
+            hit2, way2 = tlbs.lookup(stlb_c, m_r)
+            walkn = act_r & ~hit1 & ~hit2
+            pde_hit, pde_way = tlbs.lookup(pde, leaf_r)
+            pdpte_hit, pdpte_way = tlbs.lookup(pdpte, mid_r)
+
+            mid_read = jnp.where(pde_hit, 0.0, mread_r)
+            full = ~pde_hit & ~pdpte_hit
+            if thp:
+                top_read = zerosT
+            else:
+                top_read = jnp.where(full, tread_r, 0.0)
+            root_read = jnp.where(full, f32(cc.llc_hit), 0.0)
+            walk_cost = jnp.where(
+                walkn, lread_r + mid_read + top_read + root_read, 0.0)
+            walk_reads = jnp.where(
+                walkn,
+                (~leaf_llc_r).astype(I32) + (~pde_hit & ~up1_r).astype(I32)
+                + ((full & ~up2_r).astype(I32) if not thp else 0),
+                0)
+            tlb_penalty = jnp.where(act_r & ~hit1, f32(cc.stlb_hit), 0.0)
+            stall = walk_cost + f32(cc.data_stall_frac) * dcost_r
+            total = jnp.where(act_r, f32(cc.cpu_work), 0.0) \
+                + tlb_penalty + stall
+
+            l1 = tlbs.update(l1, m_r, way1, now_s, act_r)
+            stlb_c = tlbs.update(stlb_c, m_r, way2, now_s, act_r & ~hit1)
+            pde = tlbs.update(pde, leaf_r, pde_way, now_s, walkn)
+            pdpte = tlbs.update(pdpte, mid_r, pdpte_way, now_s, walkn)
+
+            ct = ct + total
+            cwk = cwk + walk_cost
+            cst = cst + stall
+            cdm = cdm + dcost_r
+            n_l1 = n_l1 + jnp.sum((act_r & hit1).astype(I32))
+            n_stlb = n_stlb + jnp.sum((act_r & ~hit1 & hit2).astype(I32))
+            n_walk = n_walk + jnp.sum(walkn.astype(I32))
+            n_wmr = n_wmr + jnp.sum(walk_reads)
+            carry = (l1, stlb_c, pde, pdpte, ct, cwk, cst, cdm,
+                     n_l1, n_stlb, n_walk, n_wmr)
+            out = (jnp.sum(ct), jnp.sum(cwk), jnp.sum(cst), jnp.sum(cdm),
+                   n_l1, n_stlb, n_walk)
+            return carry, out
+
+        cyc, cnt = st.cycles, st.counters
+        carry0 = (st.l1_tlb, st.stlb, st.pde_pwc, st.pdpte_pwc,
+                  cyc.total, cyc.walk, cyc.stall, cyc.data_mem,
+                  cnt.l1_hits, cnt.stlb_hits, cnt.walks, cnt.walk_mem_reads)
+        xs = (m, active, now_rows, leaf_id, mid_id, leaf_read,
+              mid_read_miss, top_read_miss, data_cost, leaf_llc, up1_llc,
+              up2_llc)
+        carry, rows = jax.lax.scan(row, carry0, xs)
+        (l1, stlb_c, pde, pdpte, ct, cwk, cst, cdm,
+         n_l1, n_stlb, n_walk, n_wmr) = carry
+        tot_r, walk_r, stall_r, dmem_r, l1_r, stlb_r, walks_r = rows
+
+        access_recent = st.access_recent.at[
+            jnp.where(active, m, n_map)].add(1, mode="drop")
+        cyc = dataclasses.replace(cyc, total=ct, walk=cwk, stall=cst,
+                                  data_mem=cdm)
+        cnt = dataclasses.replace(cnt, l1_hits=n_l1, stlb_hits=n_stlb,
+                                  walks=n_walk, walk_mem_reads=n_wmr)
+        st = dataclasses.replace(
+            st, l1_tlb=l1, stlb=stlb_c, pde_pwc=pde, pdpte_pwc=pdpte,
+            access_recent=access_recent, cycles=cyc, counters=cnt,
+            step=st.step + jnp.sum(valid_blk.astype(I32)))
+
+        def const(v):
+            return jnp.broadcast_to(v, (B,))
+
+        # Per-row cumulative timeline, same order as step()'s out tuple;
+        # quantities phase A cannot move are window constants.
+        out = (tot_r, walk_r, stall_r,
+               const(st.counters.faults),
+               const(st.node_free[0] + st.node_free[1]),
+               const(jnp.sum((st.leaf_node >= 2).astype(I32))),
+               const(jnp.sum(((st.leaf_node >= 0)
+                              & (st.leaf_node < 2)).astype(I32))),
+               walks_r,
+               const(st.counters.data_migrations),
+               const(st.counters.l4_mig_success),
+               const(st.cycles.migration),
+               dmem_r,
+               const(jnp.sum(st.cycles.fault)),
+               l1_r, stlb_r)
+        return st, out
+
+    return fast_window
+
+
+def _compiled_run(mc: MachineConfig, budget: int, phase_b: str = "batched",
+                  engine: str = "blocked", block: int = DEFAULT_BLOCK,
+                  group: Optional[int] = None):
+    """One jitted runner per (machine shape, AutoNUMA bound, phase-B
+    engine, execution engine, window size, allocator group bound).
 
     Policy and cost configs are traced arguments, so every policy bundle —
     and every CostConfig variation — reuses the same compiled artifact for
-    a given trace shape.
+    a given trace shape.  ``engine="blocked"`` scans window tiles (the
+    time-blocked fast path with a per-step fallback on event windows);
+    ``"per_step"`` is the retained step-at-a-time reference.
     """
-    key = (mc, budget, phase_b)
+    assert engine in ("blocked", "per_step"), engine
+    key = (mc, budget, phase_b, engine, block, group)
     if key not in _RUN_CACHE:
-        step = _build_step(mc, budget, phase_b)
+        step = _build_step(mc, budget, phase_b, group)
+        if engine == "per_step":
+            @jax.jit
+            def run_all(st, cc, pc, xs, seg_of_map, seg_of_leaf):
+                def body(s, x):
+                    return step(s, cc, pc, x, seg_of_map, seg_of_leaf)
+                return jax.lax.scan(body, st, xs)
+        else:
+            fast_window = _build_fast_window(mc)
 
-        @jax.jit
-        def run_all(st, cc, pc, xs, seg_of_map, seg_of_leaf):
-            def body(s, x):
-                return step(s, cc, pc, x, seg_of_map, seg_of_leaf)
-            return jax.lax.scan(body, st, xs)
+            @jax.jit
+            def run_all(st, cc, pc, xs, seg_of_map, seg_of_leaf):
+                def body(s, xw):
+                    (va_w, wr_w, fid_w, llc_w, sched_w, vl_w, df_w, ds_w,
+                     hf_w, is_ev) = xw
+
+                    def ev(s1):
+                        def per_step_row(s2, xr):
+                            return step(s2, cc, pc, xr, seg_of_map,
+                                        seg_of_leaf)
+                        return jax.lax.scan(
+                            per_step_row, s1,
+                            (va_w, wr_w, fid_w, llc_w, sched_w, df_w,
+                             ds_w, hf_w, vl_w))
+
+                    def fast(s1):
+                        return fast_window(s1, cc, va_w, wr_w, llc_w, vl_w)
+
+                    # the window-event predicate is host data shared by
+                    # every lane, so the branch survives a vmapped sweep
+                    return jax.lax.cond(is_ev, ev, fast, s)
+                return jax.lax.scan(body, st, xs)
 
         _RUN_CACHE[key] = run_all
     return _RUN_CACHE[key]
@@ -821,16 +1101,79 @@ def seg_of_leaf_table(trace: Trace, mc: MachineConfig) -> jax.Array:
 
 
 def trace_xs(trace: Trace, mc: MachineConfig, pc: PolicyConfig,
-             start_step: int = 0):
-    """Scan inputs for one trace: per-step rows + schedule predicates."""
+             start_step: int = 0, sched: Optional[np.ndarray] = None):
+    """Per-step scan inputs for one trace: rows + schedule predicates."""
     do_free = np.asarray(trace.free_seg) >= 0
     do_scan = scan_step_mask(trace.n_steps, int(pc.autonuma_period),
                              enabled=bool(pc.autonuma), start_step=start_step)
-    sched = fault_schedule(trace, mc)
+    if sched is None:
+        sched = fault_schedule(trace, mc)
     return (jnp.asarray(trace.va, I32), jnp.asarray(trace.is_write),
             jnp.asarray(trace.free_seg, I32), jnp.asarray(trace.llc, F32),
             jnp.asarray(sched), jnp.asarray(do_free), jnp.asarray(do_scan),
-            jnp.asarray((sched & SCHED_DO).any(axis=1)))
+            jnp.asarray((sched & SCHED_DO).any(axis=1)),
+            jnp.ones((trace.n_steps,), jnp.bool_))
+
+
+# Idle-pad fill values for the nine per-step window arrays, in xs order:
+# (va, is_write, free_seg, llc, sched, valid, do_free, do_scan,
+# has_fault).  Load-bearing: sched=0 carries no DO/WINNER bits, fid=-1
+# frees nothing, valid=False gates the step clock — shared by the solo
+# (blocked_xs) and sweep (sweep_lanes) tilings so pad-row semantics can
+# never diverge between them.
+WINDOW_PAD_FILLS = (-1, False, -1, 0.0, 0, False, False, False, False)
+
+
+def window_tiles(arrays, n_steps: int, block: int,
+                 fills=WINDOW_PAD_FILLS):
+    """Idle-pad per-step host arrays to a multiple of ``block`` and tile
+    them ``[n_windows, block, ...]``.  The window count depends only on
+    the step count, never the trace content — the property that keeps
+    compiled blocked programs quantizing across trace mixes."""
+    n_w = -(-n_steps // block)
+    pad = n_w * block - n_steps
+    out = []
+    for a, fill in zip(arrays, fills):
+        a = np.asarray(a)
+        if pad:
+            a = np.concatenate(
+                [a, np.full((pad,) + a.shape[1:], fill, a.dtype)])
+        out.append(a.reshape((n_w, block) + a.shape[1:]))
+    return out
+
+
+def blocked_xs(trace: Trace, mc: MachineConfig, pc: PolicyConfig,
+               start_step: int = 0, block: int = DEFAULT_BLOCK,
+               sched: Optional[np.ndarray] = None):
+    """Window-tiled scan inputs for the time-blocked engine.
+
+    Returns ``(xs, valid_host)``: ``xs`` carries every per-step row plus
+    the window-event predicate (``[n_windows]``, host bool — any free /
+    scan tick / fault inside the window), ``valid_host`` is the
+    ``[n_windows, block]`` bool mask mapping window rows back to trace
+    steps (idle pad rows are dropped when the per-step timeline is
+    reassembled).
+    """
+    S = trace.n_steps
+    if sched is None:
+        sched = fault_schedule(trace, mc)
+    do_free = np.asarray(trace.free_seg) >= 0
+    do_scan = scan_step_mask(S, int(pc.autonuma_period),
+                             enabled=bool(pc.autonuma),
+                             start_step=start_step)
+    has_fault = np.asarray((sched & SCHED_DO) > 0).any(axis=1)
+    va, wr, fid, llc, sch, vl, df, ds, hf = window_tiles(
+        (trace.va.astype(np.int32), np.asarray(trace.is_write, bool),
+         np.asarray(trace.free_seg, np.int32),
+         np.asarray(trace.llc, np.float32), sched, np.ones((S,), bool),
+         do_free, do_scan, has_fault),
+        S, block)
+    win_event = (df | ds | hf).any(axis=1)
+    xs = (jnp.asarray(va), jnp.asarray(wr), jnp.asarray(fid),
+          jnp.asarray(llc), jnp.asarray(sch), jnp.asarray(vl),
+          jnp.asarray(df), jnp.asarray(ds), jnp.asarray(hf),
+          jnp.asarray(win_event))
+    return xs, vl
 
 
 class TieredMemSimulator:
@@ -839,32 +1182,58 @@ class TieredMemSimulator:
     ``phase_b`` selects the fault engine: ``"batched"`` (default, the
     conflict-aware vectorized path) or ``"sequential"`` (the per-thread
     ``fori_loop`` reference the batched engine is tested against).
+
+    ``engine`` selects the stepper: ``"blocked"`` (default — the
+    time-blocked fast path over ``block``-step windows, bit-identical to
+    per-step execution) or ``"per_step"`` (the retained one-step-per-scan
+    reference).
     """
 
     def __init__(self, mc: MachineConfig = MachineConfig(),
                  cc: CostConfig = CostConfig(),
                  pc: PolicyConfig = PolicyConfig(),
-                 phase_b: str = "batched"):
+                 phase_b: str = "batched",
+                 engine: str = "blocked",
+                 block: int = DEFAULT_BLOCK):
+        assert engine in ("blocked", "per_step"), engine
         self.mc, self.cc, self.pc = mc, cc, pc
         self.phase_b = phase_b
+        self.engine = engine
+        self.block = int(block)
 
     def run(self, trace: Trace, state: Optional[SimState] = None) -> RunResult:
         mc = self.mc
         assert trace.va.shape[1] == mc.n_threads, \
             f"trace has {trace.va.shape[1]} threads, machine {mc.n_threads}"
         budget = min(int(self.pc.autonuma_budget), mc.n_map)
-        run_all = _compiled_run(mc, budget, self.phase_b)
+        sched = fault_schedule(trace, mc)      # memoized; computed once
+        group = None
+        if self.phase_b == "batched":
+            group = min(pow2ceil(fault_group_bound(sched)), mc.n_threads)
 
         seg_of_map = jnp.asarray(trace.seg_of_map, I32)
         seg_of_leaf = seg_of_leaf_table(trace, mc)
 
         st0 = state if state is not None else init_state(mc)
         start = int(np.asarray(state.step)) if state is not None else 0
-        xs = trace_xs(trace, mc, self.pc, start_step=start)
 
-        final, outs = run_all(st0, self.cc, self.pc, xs, seg_of_map,
-                              seg_of_leaf)
+        if self.engine == "blocked":
+            block = min(self.block, pow2ceil(trace.n_steps))
+            xs, valid = blocked_xs(trace, mc, self.pc, start_step=start,
+                                   block=block, sched=sched)
+            run_all = _compiled_run(mc, budget, self.phase_b, "blocked",
+                                    block, group)
+            final, outs = run_all(st0, self.cc, self.pc, xs, seg_of_map,
+                                  seg_of_leaf)
+            timeline = {k: np.asarray(v)[valid]
+                        for k, v in zip(TIMELINE_KEYS, outs)}
+        else:
+            xs = trace_xs(trace, mc, self.pc, start_step=start, sched=sched)
+            run_all = _compiled_run(mc, budget, self.phase_b, "per_step",
+                                    0, group)
+            final, outs = run_all(st0, self.cc, self.pc, xs, seg_of_map,
+                                  seg_of_leaf)
+            timeline = {k: np.asarray(v) for k, v in zip(TIMELINE_KEYS, outs)}
         final = jax.device_get(final)
-        timeline = {k: np.asarray(v) for k, v in zip(TIMELINE_KEYS, outs)}
         return RunResult(final_state=final, timeline=timeline,
                          trace_name=trace.name, policy_label=self.pc.label())

@@ -17,6 +17,16 @@ Two entry points share the engine:
     service (``repro.service``): a broker bucketing arbitrary concurrent
     queries by trace shape flushes each bucket through one call here.
 
+Execution is time-blocked by default (``engine="blocked"``, see
+``core.sim``): the scan iterates fixed ``[block, T]`` step-windows; a
+window with no event on ANY lane (no frees, no AutoNUMA ticks, no faults
+— the union predicate, like the per-step schedule bits before it) runs as
+one vectorized fast-path step per lane, and event windows replay the
+exact per-step path row by row.  Window count and shapes depend only on
+the trace *shape*, so the compiled-program quantization the broker's
+shape buckets rely on is untouched.  ``engine="per_step"`` keeps the
+step-at-a-time reference scan.
+
 Lanes can additionally be sharded across devices (``lane_sharding`` —
 ``jax.sharding`` over the lane axis): the state pytree and every per-lane
 input are placed with a ``PartitionSpec`` over a 1-D ``"lanes"`` mesh, so
@@ -24,10 +34,12 @@ a policy grid spreads over all local devices with no change to the scan
 body.  On a single-device host the mesh degenerates and results are
 bit-identical to the unsharded path.
 
-Correctness contract: a sweep lane is bit-identical (placements, counters;
-cycles to float32 rounding) to the corresponding sequential
+Correctness contract: a sweep lane is bit-identical (placements,
+counters; cycles to float32 rounding — and bit-exact between the blocked
+and per-step engines) to the corresponding sequential
 ``TieredMemSimulator`` run and to the pure-Python ``core.ref`` oracle —
-``tests/test_sweep.py`` and ``tests/test_service.py`` enforce both.
+``tests/test_sweep.py``, ``tests/test_blocked.py`` and
+``tests/test_service.py`` enforce these.
 
 Constraints inherited from the step being compiled once for all lanes:
 
@@ -39,7 +51,9 @@ Constraints inherited from the step being compiled once for all lanes:
     swept policies (or the explicit ``budget`` override, which may only
     raise it); per-lane budgets gate through traced masks, so an
     over-provisioned bound never changes results — brokers quantize it to
-    keep compile keys stable across bursts.
+    keep compile keys stable across bursts.  The allocator conflict-group
+    bound (``group``) quantizes the same way: power-of-two of the batch
+    maximum, overridable upward.
 """
 from __future__ import annotations
 
@@ -51,15 +65,18 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .config import CostConfig, MachineConfig, PolicyConfig
-from .sim import (RunResult, SCHED_DO, TIMELINE_KEYS, Trace, _build_step,
-                  fault_schedule, scan_step_mask, seg_of_leaf_table)
+from .sim import (DEFAULT_BLOCK, RunResult, SCHED_DO, TIMELINE_KEYS, Trace,
+                  _build_fast_window, _build_step, fault_group_bound,
+                  fault_schedule, pow2ceil, scan_step_mask, seg_of_leaf_table,
+                  window_tiles)
 from .state import init_state
 
 I32 = jnp.int32
 F32 = jnp.float32
 
-# One jitted vmapped scan per (machine, budget); jax's jit cache then holds
-# one executable per (lane count, trace shape, lane sharding).
+# One jitted vmapped scan per (machine, budget, engines, block, group);
+# jax's jit cache then holds one executable per (lane count, trace shape,
+# lane sharding).
 _SWEEP_CACHE: Dict[Tuple, object] = {}
 # Fallback compile accounting for jax versions without the (private)
 # jit _cache_size API: one entry per distinct compiled signature.
@@ -70,10 +87,10 @@ def compile_count() -> int:
     """Number of XLA compilations performed by sweep()/sweep_lanes() so far.
 
     Counts entries in the underlying jit caches (one per distinct
-    (machine, budget, lane-count, trace-shape, sharding) combination) —
-    tests assert a ≥4-policy sweep adds exactly one and that a
-    service-cache hit adds zero.  Falls back to the engine's own signature
-    accounting if the jit cache-size API is unavailable.
+    (machine, budget, engine, lane-count, trace-shape, sharding)
+    combination) — tests assert a ≥4-policy sweep adds exactly one and
+    that a service-cache hit adds zero.  Falls back to the engine's own
+    signature accounting if the jit cache-size API is unavailable.
     """
     sizes = [getattr(fn, "_cache_size", None) for fn in _SWEEP_CACHE.values()]
     if all(s is not None for s in sizes):
@@ -97,28 +114,73 @@ def _stack_leaves(objs):
     return jax.tree.map(stack, *objs)
 
 
-def _sweep_runner(mc: MachineConfig, budget: int, phase_b: str):
-    key = (mc, budget, phase_b)
+def _sweep_runner(mc: MachineConfig, budget: int, phase_b: str,
+                  engine: str, block: int, group: Optional[int]):
+    key = (mc, budget, phase_b, engine, block, group)
     if key not in _SWEEP_CACHE:
-        step = _build_step(mc, budget, phase_b)
+        step = _build_step(mc, budget, phase_b, group)
+        if engine == "per_step":
+            @jax.jit
+            def run_sweep(st, cc, pc, xs, seg_of_map, seg_of_leaf):
+                def body(carry, x):
+                    va_row, w_row, fid, llc, sched, do_free, do_scan, \
+                        has_fault, valid = x
 
-        @jax.jit
-        def run_sweep(st, cc, pc, xs, seg_of_map, seg_of_leaf):
-            def body(carry, x):
-                va_row, w_row, fid, llc, sched, do_free, do_scan, \
-                    has_fault = x
+                    def lane(st1, cc1, pc1, va1, w1, fid1, llc1, sched1,
+                             sm, sl):
+                        # the schedule predicates stay un-batched so the
+                        # step's lax.conds keep skipping work under vmap;
+                        # the per-thread fault-schedule row is per-lane
+                        # (one per trace) and rides the vmap like the va
+                        # row
+                        return step(st1, cc1, pc1,
+                                    (va1, w1, fid1, llc1, sched1, do_free,
+                                     do_scan, has_fault, valid), sm, sl)
+                    return jax.vmap(lane)(carry, cc, pc, va_row, w_row,
+                                          fid, llc, sched, seg_of_map,
+                                          seg_of_leaf)
+                return jax.lax.scan(body, st, xs)
+        else:
+            fast_window = _build_fast_window(mc)
 
-                def lane(st1, cc1, pc1, va1, w1, fid1, llc1, sched1, sm, sl):
-                    # the schedule predicates stay un-batched so the
-                    # step's lax.conds keep skipping work under vmap; the
-                    # per-thread fault-schedule row is per-lane (one per
-                    # trace) and rides the vmap like the va row
-                    return step(st1, cc1, pc1,
-                                (va1, w1, fid1, llc1, sched1, do_free,
-                                 do_scan, has_fault), sm, sl)
-                return jax.vmap(lane)(carry, cc, pc, va_row, w_row, fid,
-                                      llc, sched, seg_of_map, seg_of_leaf)
-            return jax.lax.scan(body, st, xs)
+            @jax.jit
+            def run_sweep(st, cc, pc, xs, seg_of_map, seg_of_leaf):
+                def body(carry, xw):
+                    (va_w, wr_w, fid_w, llc_w, sched_w, vl_w, df_w, ds_w,
+                     hf_w, is_ev) = xw
+
+                    def ev(s1):
+                        def per_step_row(s2, xr):
+                            va_r, wr_r, fid_r, llc_r, sched_r, fr, sc, \
+                                hf_s, vl_s = xr
+
+                            def lane(st1, cc1, pc1, va1, w1, fid1, llc1,
+                                     sched1, sm, sl):
+                                return step(st1, cc1, pc1,
+                                            (va1, w1, fid1, llc1, sched1,
+                                             fr, sc, hf_s, vl_s), sm, sl)
+                            return jax.vmap(lane)(s2, cc, pc, va_r, wr_r,
+                                                  fid_r, llc_r, sched_r,
+                                                  seg_of_map, seg_of_leaf)
+                        return jax.lax.scan(
+                            per_step_row, s1,
+                            (va_w, wr_w, fid_w, llc_w, sched_w, df_w,
+                             ds_w, hf_w, vl_w))
+
+                    def fast(s1):
+                        def lane(st1, cc1, va1, w1, llc1):
+                            return fast_window(st1, cc1, va1, w1, llc1,
+                                               vl_w)
+                        st2, outs = jax.vmap(lane, in_axes=(0, 0, 1, 1, 1))(
+                            s1, cc, va_w, wr_w, llc_w)
+                        # rows-major like the event branch: [B, L]
+                        return st2, jax.tree.map(
+                            lambda a: jnp.swapaxes(a, 0, 1), outs)
+
+                    # window-event predicate is lane-shared host data, so
+                    # the branch survives the vmapped lanes inside it
+                    return jax.lax.cond(is_ev, ev, fast, carry)
+                return jax.lax.scan(body, st, xs)
 
         _SWEEP_CACHE[key] = run_sweep
     return _SWEEP_CACHE[key]
@@ -157,6 +219,9 @@ def sweep_lanes(mc: MachineConfig,
                 phase_b: str = "batched",
                 budget: Optional[int] = None,
                 lane_sharding=None,
+                engine: str = "blocked",
+                block: int = DEFAULT_BLOCK,
+                group: Optional[int] = None,
                 ) -> List[RunResult]:
     """Run L independent (cost, policy, trace) lanes as one batched scan.
 
@@ -168,11 +233,20 @@ def sweep_lanes(mc: MachineConfig,
     ``budget`` (optional) raises the compiled AutoNUMA ``top_k`` bound
     above the per-lane maximum so repeated calls with different policy
     mixes reuse one executable; per-lane budgets still gate exactly.
+    ``group`` raises the allocator conflict-group bound the same way (the
+    computed bound is already power-of-two-quantized).
+
+    ``engine`` / ``block`` select the stepper (see ``core.sim``):
+    time-blocked windows by default, with event windows — the union over
+    lanes, so block boundaries stay lane-shared and policy-independent —
+    falling back to the exact per-step path.
 
     ``lane_sharding`` — ``None`` (single device), ``"auto"`` (shard the
     lane axis over every local device that divides the lane count), or an
     explicit 1-D ``"lanes"`` :class:`jax.sharding.Mesh`.
     """
+    if engine not in ("blocked", "per_step"):
+        raise ValueError(f"unknown engine {engine!r}")
     policies = list(policies)
     ccs = list(ccs)
     tr_list = list(traces)
@@ -227,9 +301,21 @@ def sweep_lanes(mc: MachineConfig,
     S = shape[0]
     scheds = [fault_schedule(tr, mc) for tr in uniq_traces]
 
+    eff_group: Optional[int] = None
+    if phase_b == "batched":
+        lane_group = min(
+            pow2ceil(max(fault_group_bound(sc) for sc in scheds)),
+            mc.n_threads)
+        if group is not None and group < lane_group:
+            raise ValueError(f"group override {group} below the lane "
+                             f"maximum {lane_group}; a smaller conflict-"
+                             "group bound drops allocator requests")
+        eff_group = min(group if group is not None else lane_group,
+                        mc.n_threads)
+
     def lanes(per_trace, dtype):
         a = np.stack([np.asarray(x, dtype) for x in per_trace], axis=1)
-        return jnp.asarray(a[:, lane_of])
+        return a[:, lane_of]
 
     va = lanes([tr.va for tr in uniq_traces], np.int32)          # [S, L, T]
     wr = lanes([tr.is_write for tr in uniq_traces], bool)
@@ -244,8 +330,30 @@ def sweep_lanes(mc: MachineConfig,
         has_fault |= (sc & SCHED_DO).any(axis=1)
     do_scan = scan_step_mask(S, period,
                              enabled=any(bool(p.autonuma) for p in policies))
-    xs = (va, wr, fid, llc, sched, jnp.asarray(do_free),
-          jnp.asarray(do_scan), jnp.asarray(has_fault))
+
+    eff_block = min(int(block), pow2ceil(S))
+    valid_host = None
+    if engine == "per_step":
+        xs = (jnp.asarray(va), jnp.asarray(wr), jnp.asarray(fid),
+              jnp.asarray(llc), jnp.asarray(sched), jnp.asarray(do_free),
+              jnp.asarray(do_scan), jnp.asarray(has_fault),
+              jnp.ones((S,), jnp.bool_))
+        lane_axis_of_x = (1, 1, 1, 1, 1, None, None, None, None)
+    else:
+        # same 9-array order and pad fills as sim.blocked_xs
+        # (WINDOW_PAD_FILLS) — pad-row semantics must match the solo path
+        va_w, wr_w, fid_w, llc_w, sched_w, vl_w, df_w, ds_w, hf_w = \
+            window_tiles(
+                (va, wr, fid, llc, sched, np.ones((S,), bool), do_free,
+                 do_scan, has_fault),
+                S, eff_block)
+        win_event = (df_w | ds_w | hf_w).any(axis=1)
+        valid_host = vl_w
+        xs = tuple(jnp.asarray(a) for a in
+                   (va_w, wr_w, fid_w, llc_w, sched_w, vl_w, df_w, ds_w,
+                    hf_w, win_event))
+        # windowed lane arrays carry the lane axis at position 2
+        lane_axis_of_x = (2, 2, 2, 2, 2, None, None, None, None, None)
 
     seg_maps = np.stack([np.asarray(tr.seg_of_map, np.int32)
                          for tr in uniq_traces])
@@ -262,22 +370,29 @@ def sweep_lanes(mc: MachineConfig,
     if mesh is not None:
         shard_key = int(mesh.devices.size)
         lane_sh = NamedSharding(mesh, P("lanes"))
-        row_sh = NamedSharding(mesh, P(None, "lanes"))
         rep_sh = NamedSharding(mesh, P())
         put = jax.device_put
         st0 = jax.tree.map(lambda a: put(a, lane_sh), st0)
         lane_cc = jax.tree.map(lambda a: put(a, lane_sh), lane_cc)
         lane_pc = jax.tree.map(lambda a: put(a, lane_sh), lane_pc)
-        xs = tuple(put(x, row_sh if x.ndim > 1 else rep_sh) for x in xs)
+        xs = tuple(
+            put(x, rep_sh if ax is None else NamedSharding(
+                mesh, P(*([None] * ax + ["lanes"]))))
+            for x, ax in zip(xs, lane_axis_of_x))
         seg_of_map = put(seg_of_map, lane_sh)
         seg_of_leaf = put(seg_of_leaf, lane_sh)
 
-    run_sweep = _sweep_runner(mc, eff_budget, phase_b)
-    _SIGNATURES.add((mc, eff_budget, phase_b, L, S, shard_key))
+    run_sweep = _sweep_runner(mc, eff_budget, phase_b, engine, eff_block,
+                              eff_group)
+    _SIGNATURES.add((mc, eff_budget, phase_b, engine, eff_block, eff_group,
+                     L, S, shard_key))
     final, outs = run_sweep(st0, lane_cc, lane_pc, xs, seg_of_map,
                             seg_of_leaf)
     final = jax.device_get(final)
     outs = [np.asarray(o) for o in jax.device_get(outs)]
+    if engine == "blocked":
+        # [n_windows, block, L] -> [steps, L], pad rows dropped in order
+        outs = [o[valid_host] for o in outs]
 
     results: List[RunResult] = []
     for i, (pc, tr) in enumerate(zip(policies, tr_list)):
@@ -296,16 +411,19 @@ def sweep(mc: MachineConfig,
           phase_b: str = "batched",
           budget: Optional[int] = None,
           lane_sharding=None,
+          engine: str = "blocked",
+          block: int = DEFAULT_BLOCK,
           ) -> Union[List[RunResult], List[List[RunResult]]]:
     """Run every (trace, policy) pair as one batched compiled scan.
 
     Returns a list of RunResults aligned with ``policies`` when ``traces``
     is a single Trace, else a list-of-lists indexed ``[trace][policy]``.
     ``cc`` may be a single CostConfig (shared) or one per policy.
-    ``phase_b`` selects the fault engine (see ``TieredMemSimulator``);
-    the default batched engine removes the per-thread ``lax.cond`` that
-    used to cost fault-dominated sweeps ~1.5x per vmap lane.  ``budget``
-    and ``lane_sharding`` pass through to :func:`sweep_lanes`.
+    ``phase_b`` selects the fault engine and ``engine``/``block`` the
+    stepper (see ``TieredMemSimulator``); the default batched fault
+    engine removed the per-thread ``lax.cond`` vmap penalty, the default
+    blocked stepper batches event-free step windows.  ``budget`` and
+    ``lane_sharding`` pass through to :func:`sweep_lanes`.
     """
     single = isinstance(traces, Trace)
     tr_list = [traces] if single else list(traces)
@@ -324,6 +442,7 @@ def sweep(mc: MachineConfig,
         [c for _ in range(M) for c in ccs],
         [p for _ in range(M) for p in policies],
         [tr for tr in tr_list for _ in range(P_)],
-        phase_b=phase_b, budget=budget, lane_sharding=lane_sharding)
+        phase_b=phase_b, budget=budget, lane_sharding=lane_sharding,
+        engine=engine, block=block)
     results = [flat[j * P_:(j + 1) * P_] for j in range(M)]
     return results[0] if single else results

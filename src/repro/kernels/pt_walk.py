@@ -44,15 +44,23 @@ def _kernel(upper_ref, leaf_tier_ref, leaf_entries_ref, vb_ref,
 def pt_walk_kernel(upper_row, leaf_tier, leaf_entries, vb, *,
                    q_block: int = 256, interpret: bool = False):
     """upper_row i32[max_leaf], leaf_tier i32[n_leaf],
-    leaf_entries i32[n_leaf, FANOUT], vb i32[N] -> (tier[N], slot[N])."""
+    leaf_entries i32[n_leaf, FANOUT], vb i32[N] -> (tier[N], slot[N]).
+
+    ``N`` need not divide ``q_block``: queries are zero-padded to the
+    next block multiple (query 0 is always in range, the pad lanes walk
+    it harmlessly) and the pad results are sliced off.
+    """
     n = vb.shape[0]
     n_leaf, fanout = leaf_entries.shape
-    q_block = min(q_block, n)
-    assert n % q_block == 0
-    grid = (n // q_block,)
+    q_block = min(q_block, max(n, 1))
+    pad = (-n) % q_block
+    if pad:
+        vb = jnp.concatenate([vb, jnp.zeros((pad,), vb.dtype)])
+    n_pad = n + pad
+    grid = (n_pad // q_block,)
 
     kernel = functools.partial(_kernel, fanout=fanout)
-    return pl.pallas_call(
+    tier, slot = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -65,7 +73,10 @@ def pt_walk_kernel(upper_row, leaf_tier, leaf_entries, vb, *,
             pl.BlockSpec((q_block,), lambda i: (i,)),
             pl.BlockSpec((q_block,), lambda i: (i,)),
         ],
-        out_shape=[jax.ShapeDtypeStruct((n,), I32),
-                   jax.ShapeDtypeStruct((n,), I32)],
+        out_shape=[jax.ShapeDtypeStruct((n_pad,), I32),
+                   jax.ShapeDtypeStruct((n_pad,), I32)],
         interpret=interpret,
     )(upper_row[None, :], leaf_tier[None, :], leaf_entries, vb)
+    if pad:
+        tier, slot = tier[:n], slot[:n]
+    return tier, slot

@@ -24,12 +24,12 @@ per-query execution; ``tests/test_service.py`` pins bit-identical
 per-query results against direct sequential ``TieredMemSimulator`` runs.
 """
 from .broker import BrokerStats, SimBroker
-from .cache import ResultCache
+from .cache import DiskCacheTier, ResultCache
 from .query import SimFuture, SimQuery, query_cache_key, spec_cache_key
 from .search import grid_search, policy_grid, successive_halving
 
 __all__ = [
-    "BrokerStats", "SimBroker", "ResultCache", "SimFuture", "SimQuery",
-    "query_cache_key", "spec_cache_key", "grid_search", "policy_grid",
-    "successive_halving",
+    "BrokerStats", "SimBroker", "DiskCacheTier", "ResultCache", "SimFuture",
+    "SimQuery", "query_cache_key", "spec_cache_key", "grid_search",
+    "policy_grid", "successive_halving",
 ]

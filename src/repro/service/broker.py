@@ -45,17 +45,10 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from ..core.sweep import compile_count as sweep_compile_count
 from ..core.sweep import sweep_lanes
 from ..core.config import MachineConfig
-from ..core.sim import RunResult, Trace
+from ..core.sim import RunResult, Trace, pow2ceil as _pow2ceil
 from ..core.workloads import TraceSpec
 from .cache import ResultCache
 from .query import SimFuture, SimQuery, query_cache_key, spec_cache_key
-
-
-def _pow2ceil(n: int, floor: int = 1) -> int:
-    p = max(int(floor), 1)
-    while p < n:
-        p <<= 1
-    return p
 
 
 @dataclasses.dataclass
@@ -152,7 +145,7 @@ class SimBroker:
         mc: MachineConfig = q.machine
         period = int(q.policy.autonuma_period) if bool(q.policy.autonuma) \
             else 0
-        return (mc, q.phase_b, canonical.n_steps, period)
+        return (mc, q.phase_b, q.engine, canonical.n_steps, period)
 
     def submit(self, q: SimQuery) -> SimFuture:
         self.stats.queries += 1
@@ -262,15 +255,27 @@ class SimBroker:
         if not bucket:
             del self._buckets[bkey]
 
-        mc, phase_b, _, _ = bkey
+        mc, phase_b, engine, _, _ = bkey
         qbudget = _pow2ceil(min(
             max(int(p.query.policy.autonuma_budget) for p in batch),
             mc.n_map))
+        # The allocator conflict-group bound is trace-content-derived, so
+        # letting sweep_lanes compute it per batch would mint up to
+        # log2(T)+1 executables per bucket as fault profiles vary across
+        # bursts.  Like the budget bound above, brokers trade the scan-
+        # depth cut for compile-key stability: pin the bound at its
+        # maximum (full thread depth — the pre-blocked-engine status quo
+        # for fault steps; per-lane results are unaffected).
+        qgroup = mc.n_threads if phase_b == "batched" else None
         ccs = [p.query.cost for p in batch]
         pcs = [p.query.policy for p in batch]
         trs = [p.trace for p in batch]
+        # Lane padding replicates lane 0, which is also block-aware: a pad
+        # lane adds no new trace, so the union event mask — and with it
+        # the windowed shapes the blocked engine compiles for — stays
+        # exactly the batch's own, and pow2 lane counts keep quantizing.
         n_pad = _pow2ceil(len(batch)) - len(batch)
-        for _ in range(n_pad):               # lane padding: replicate lane 0
+        for _ in range(n_pad):
             ccs.append(batch[0].query.cost)
             pcs.append(batch[0].query.policy)
             trs.append(batch[0].trace)
@@ -279,7 +284,8 @@ class SimBroker:
         try:
             results = sweep_lanes(
                 mc, ccs, pcs, trs, phase_b=phase_b, budget=qbudget,
-                lane_sharding=self.lane_sharding)
+                lane_sharding=self.lane_sharding, engine=engine,
+                group=qgroup)
         except Exception as exc:
             # a poisoned microbatch must not strand its futures: fail the
             # whole batch (waiters raise instead of spinning) and let the

@@ -1,7 +1,7 @@
 """Content-addressed, LRU-bounded result cache for the simulation service.
 
 Keys are :func:`repro.service.query.query_cache_key` tuples — machine +
-engine + every cost/policy leaf + the canonical trace digest (for
+engines + every cost/policy leaf + the canonical trace digest (for
 spec-addressed queries, :func:`~repro.service.query.spec_cache_key`
 substitutes the recipe digest so hits skip generation too) — so a hit
 means "this exact simulation already ran" and is served with zero device
@@ -10,20 +10,135 @@ latter via ``sweep.compile_count()``).  Values are full
 :class:`~repro.core.sim.RunResult` pytrees (host-side numpy), shared by
 reference: results are treated as immutable by convention, like every
 other artifact of the functional simulator.
+
+Optionally the cache spills to disk (``spill_dir``): keys are already
+process-stable (dataclass reprs of plain scalars plus content digests —
+no object identity anywhere), so a fresh process pointed at the same
+directory serves warm hits with zero device work.  The disk tier is an
+mtime-LRU with a byte cap; entries store their full key alongside the
+value, so a (vanishingly unlikely) filename-hash collision or a stale
+format reads as a miss, never as a wrong result.
 """
 from __future__ import annotations
 
 import collections
+import hashlib
+import os
+import pickle
+import tempfile
+from pathlib import Path
 from typing import Optional, Tuple
 
 from ..core.sim import RunResult
 
+_DISK_FORMAT = 1
+
+
+class DiskCacheTier:
+    """Pickle-file LRU keyed by a stable hash of ``repr(key)``.
+
+    Not safe against concurrent writers of the *same* entry beyond
+    last-write-wins (writes go through a temp file + atomic rename), which
+    matches the cache contract: identical keys hold identical results.
+    """
+
+    def __init__(self, path, max_bytes: int = 1 << 30):
+        self.path = Path(path)
+        self.path.mkdir(parents=True, exist_ok=True)
+        self.max_bytes = int(max_bytes)
+        self.hits = 0
+        self.misses = 0
+        # Running byte estimate so put() doesn't rescan the directory
+        # every time: None = unknown (first put resyncs via _evict);
+        # overwrites over-count, which only triggers an early resync.
+        self._approx_bytes = None
+
+    def _file(self, key: Tuple) -> Path:
+        digest = hashlib.blake2b(repr(key).encode(), digest_size=16)
+        return self.path / f"{digest.hexdigest()}.pkl"
+
+    def get(self, key: Tuple) -> Optional[RunResult]:
+        f = self._file(key)
+        try:
+            with open(f, "rb") as fh:
+                payload = pickle.load(fh)
+            if (payload.get("format") != _DISK_FORMAT
+                    or payload.get("key") != key):
+                raise ValueError("stale or colliding cache entry")
+        except (OSError, ValueError, pickle.UnpicklingError, EOFError,
+                AttributeError, ImportError):
+            self.misses += 1
+            return None
+        try:
+            os.utime(f)                      # refresh LRU position
+        except OSError:
+            pass          # read-only spill dir: the hit still counts
+        self.hits += 1
+        return payload["value"]
+
+    def put(self, key: Tuple, value: RunResult) -> None:
+        blob = pickle.dumps({"format": _DISK_FORMAT, "key": key,
+                             "value": value})
+        if len(blob) > self.max_bytes:
+            return
+        fd, tmp = tempfile.mkstemp(dir=self.path, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "wb") as fh:
+                fh.write(blob)
+            os.replace(tmp, self._file(key))
+        except OSError:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            return
+        if self._approx_bytes is not None:
+            self._approx_bytes += len(blob)
+        if self._approx_bytes is None or self._approx_bytes > self.max_bytes:
+            self._evict()                    # scans once, then resyncs
+
+    def _evict(self) -> None:
+        entries = []
+        for f in self.path.glob("*.pkl"):
+            try:
+                st = f.stat()
+            except OSError:
+                continue      # raced with a concurrent evictor: skip
+            entries.append((st.st_mtime, st.st_size, f))
+        total = sum(size for _, size, _ in entries)
+        for _, size, f in sorted(entries):   # oldest mtime first
+            if total <= self.max_bytes:
+                break
+            try:
+                f.unlink()
+            except OSError:
+                pass          # already gone elsewhere; still over-counted
+            total -= size
+        self._approx_bytes = total
+
+    def clear(self) -> None:
+        for f in self.path.glob("*.pkl"):
+            try:
+                f.unlink()
+            except OSError:
+                pass
+        self._approx_bytes = 0
+
 
 class ResultCache:
-    def __init__(self, max_entries: int = 512):
+    """In-memory LRU with an optional on-disk spill tier.
+
+    ``get`` checks memory first, then disk (promoting the entry back into
+    memory); ``put`` writes through to both tiers.
+    """
+
+    def __init__(self, max_entries: int = 512, spill_dir=None,
+                 disk_max_bytes: int = 1 << 30):
         self._data: "collections.OrderedDict[Tuple, RunResult]" = \
             collections.OrderedDict()
         self.max_entries = max_entries
+        self.disk = (DiskCacheTier(spill_dir, disk_max_bytes)
+                     if spill_dir is not None else None)
         self.hits = 0
         self.misses = 0
 
@@ -32,6 +147,11 @@ class ResultCache:
 
     def get(self, key: Tuple) -> Optional[RunResult]:
         hit = self._data.get(key)
+        if hit is None and self.disk is not None:
+            hit = self.disk.get(key)
+            if hit is not None:
+                self._data[key] = hit        # promote; evicted LRU below
+                self._trim()
         if hit is None:
             self.misses += 1
             return None
@@ -42,8 +162,15 @@ class ResultCache:
     def put(self, key: Tuple, value: RunResult) -> None:
         self._data[key] = value
         self._data.move_to_end(key)
+        self._trim()
+        if self.disk is not None:
+            self.disk.put(key, value)
+
+    def _trim(self) -> None:
         while len(self._data) > self.max_entries:
             self._data.popitem(last=False)
 
     def clear(self) -> None:
         self._data.clear()
+        if self.disk is not None:
+            self.disk.clear()

@@ -43,6 +43,10 @@ class SimQuery:
     ``priority`` (higher flushes first) and ``deadline`` (absolute
     broker-clock seconds by which the bucket must flush) drive the
     broker's scheduler; both are identity-irrelevant for caching.
+
+    ``phase_b`` and ``engine`` select the fault engine and the stepper
+    (see ``core.sim``); both are part of the query's cache identity and
+    of its bucket key (lanes batched into one program must agree).
     """
 
     trace: Union[Trace, TraceSpec]
@@ -50,6 +54,7 @@ class SimQuery:
     cost: CostConfig = dataclasses.field(default_factory=CostConfig)
     machine: MachineConfig = dataclasses.field(default_factory=MachineConfig)
     phase_b: str = "batched"
+    engine: str = "blocked"
     priority: int = 0
     deadline: Optional[float] = None
 
@@ -60,11 +65,14 @@ class SimQuery:
                 f"{type(self.trace).__name__}")
         if self.phase_b not in ("batched", "sequential"):
             raise ValueError(f"unknown phase_b {self.phase_b!r}")
+        if self.engine not in ("blocked", "per_step"):
+            raise ValueError(f"unknown engine {self.engine!r}")
 
 
 def query_cache_key(q: SimQuery, canonical: Trace) -> Tuple:
     """Content-addressed identity of a query given its canonical trace."""
-    return (q.machine, q.phase_b, _leaf_tuple(q.cost, "CostConfig"),
+    return (q.machine, q.phase_b, q.engine,
+            _leaf_tuple(q.cost, "CostConfig"),
             _leaf_tuple(q.policy, "PolicyConfig"), trace_digest(canonical))
 
 
@@ -76,7 +84,8 @@ def spec_cache_key(q: SimQuery, pad_floor: int) -> Tuple:
     spec query and a raw-Trace query with identical content occupy
     separate cache lines."""
     assert isinstance(q.trace, TraceSpec)
-    return (q.machine, q.phase_b, _leaf_tuple(q.cost, "CostConfig"),
+    return (q.machine, q.phase_b, q.engine,
+            _leaf_tuple(q.cost, "CostConfig"),
             _leaf_tuple(q.policy, "PolicyConfig"),
             ("spec", q.trace.digest(q.machine), pad_floor))
 

@@ -1,0 +1,307 @@
+"""Time-blocked engine vs the per-step reference vs the oracle.
+
+The blocked stepper (fixed step-windows; event-free windows execute as
+one scan step with only the TLB/cycle carry threaded through, event
+windows replay the per-step path row by row) must be **bit-identical**
+to ``engine="per_step"`` — placements, counters, per-thread f32 cycle
+accumulators and the full per-step timeline, not merely within rounding
+— because the fast window replays the per-step expression tree in
+per-step order.  Same for the conflict-group-compacted allocator scan
+(``alloc.alloc_many(slot_thread=...)``) against its full-depth scan.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (CostConfig, MachineConfig, PolicyConfig,
+                        TieredMemSimulator, Trace, sweep,
+                        FIRST_TOUCH, INTERLEAVE, PT_BIND_ALL, PT_BIND_HIGH,
+                        PT_FOLLOW_DATA)
+from repro.core import alloc as alloc_mod
+from repro.core.ref import OracleSim
+from repro.core.sim import (DEFAULT_BLOCK, SCHED_WINNER, blocked_xs,
+                            fault_group_bound, fault_schedule, pow2ceil)
+
+EXACT_KEYS = ("l1_hits", "stlb_hits", "walks", "walk_mem_reads", "faults",
+              "slow_allocs", "data_migrations", "demotions",
+              "l4_mig_success", "l4_mig_already_dest", "l4_mig_in_dram",
+              "l4_mig_sibling_guard", "l4_mig_lock_skip",
+              "data_pages_dram", "data_pages_nvmm",
+              "leaf_pages_dram", "leaf_pages_nvmm", "oom_killed", "oom_step")
+CYCLE_KEYS = ("total_cycles", "walk_cycles", "stall_cycles",
+              "data_mem_cycles", "fault_cycles", "migration_cycles")
+
+POLICIES = [
+    PolicyConfig(data_policy=FIRST_TOUCH, pt_policy=PT_FOLLOW_DATA,
+                 autonuma=True, autonuma_period=16, autonuma_budget=32),
+    PolicyConfig(data_policy=FIRST_TOUCH, pt_policy=PT_BIND_HIGH, mig=True,
+                 autonuma=True, autonuma_period=16, autonuma_budget=32),
+    PolicyConfig(data_policy=INTERLEAVE, pt_policy=PT_FOLLOW_DATA,
+                 autonuma=False),
+    PolicyConfig(data_policy=INTERLEAVE, pt_policy=PT_BIND_HIGH,
+                 autonuma=True, autonuma_period=16, autonuma_budget=16),
+]
+
+
+def tiny_machine(**kw):
+    kw.setdefault("n_threads", 4)
+    kw.setdefault("dram_pages_per_node", 600)
+    kw.setdefault("nvmm_pages_per_node", 2400)
+    kw.setdefault("va_pages", 1 << 12)
+    return MachineConfig(l1_tlb_sets=4, l1_tlb_ways=2, stlb_sets=8,
+                         stlb_ways=4, pde_pwc_entries=4,
+                         pdpte_pwc_entries=2, **kw)
+
+
+def make_trace(mc, va, free_at=None):
+    steps = va.shape[0]
+    free_seg = np.full((steps,), -1, np.int32)
+    if free_at is not None:
+        free_seg[free_at] = 0
+    seg = np.zeros((mc.n_map,), np.int32)
+    seg[mc.n_map // 2:] = 1
+    return Trace(va=va.astype(np.int32),
+                 is_write=np.ones_like(va, bool),
+                 free_seg=free_seg,
+                 llc=np.full((steps,), 0.4, np.float32), seg_of_map=seg)
+
+
+def steady_trace(mc, steps=200, seed=0, touched_frac=0.25, free_at=None):
+    """Short populate burst, then a long fault-free re-access phase."""
+    rng = np.random.default_rng(seed)
+    T = mc.n_threads
+    pop_rows = min(max(int(mc.n_map * touched_frac) // T, 1), steps // 3)
+    pool = pop_rows * T
+    s = np.arange(pop_rows, dtype=np.int64)[:, None]
+    t = np.arange(T, dtype=np.int64)[None, :]
+    pop = ((s * T + t) << mc.map_shift).astype(np.int64)
+    run = (rng.integers(0, pool, (steps - pop_rows, T))
+           << mc.map_shift).astype(np.int64)
+    va = np.concatenate([pop, run]).astype(np.int32)
+    va[rng.random(va.shape) < 0.05] = -1
+    return make_trace(mc, va, free_at)
+
+
+def fault_heavy_trace(mc, steps=160, seed=1, free_at=None):
+    rng = np.random.default_rng(seed)
+    T = mc.n_threads
+    va = np.where(rng.random((steps, T)) < 0.5,
+                  rng.integers(0, mc.va_pages // 2, (steps, T)),
+                  rng.integers(0, mc.va_pages, (steps, T))).astype(np.int32)
+    va[rng.random((steps, T)) < 0.05] = -1
+    return make_trace(mc, va, free_at)
+
+
+def assert_states_bitwise(a, b, label=""):
+    flat_a, _ = jax.tree_util.tree_flatten_with_path(a)
+    flat_b = jax.tree_util.tree_leaves(b)
+    assert len(flat_a) == len(flat_b)
+    for (path, la), lb in zip(flat_a, flat_b):
+        np.testing.assert_array_equal(
+            np.asarray(la), np.asarray(lb),
+            err_msg=f"{label}: {jax.tree_util.keystr(path)}")
+
+
+def assert_blocked_matches_per_step(mc, pc, trace, cc=None, block=16):
+    cc = cc or CostConfig()
+    blk = TieredMemSimulator(mc=mc, cc=cc, pc=pc, engine="blocked",
+                             block=block).run(trace)
+    ps = TieredMemSimulator(mc=mc, cc=cc, pc=pc, engine="per_step").run(trace)
+    assert_states_bitwise(blk.final_state, ps.final_state, pc.label())
+    for k in blk.timeline:
+        np.testing.assert_array_equal(blk.timeline[k], ps.timeline[k],
+                                      err_msg=f"{pc.label()}: tl/{k}")
+        assert blk.timeline[k].shape == (trace.n_steps,)
+    return blk
+
+
+def assert_matches_oracle(res, mc, cc, pc, trace):
+    oracle = OracleSim(mc, cc, pc)
+    oracle.run(trace)
+    ref = oracle.summary()
+    s = res.summary()
+    for k in EXACT_KEYS:
+        assert s[k] == ref[k], f"{pc.label()}: oracle {k}: {s[k]} != {ref[k]}"
+    for k in CYCLE_KEYS:
+        np.testing.assert_allclose(s[k], ref[k], rtol=1e-5,
+                                   err_msg=f"{pc.label()}: oracle {k}")
+
+
+def test_steady_state_trace_bitwise():
+    """The target scenario: long fault-free stretches become fast windows
+    (several per trace, forced by a small block) and stay bit-identical —
+    cycles and timelines included, not just to rounding."""
+    mc = tiny_machine()
+    cc = CostConfig()
+    trace = steady_trace(mc, steps=200, seed=3)
+    for pc in POLICIES:
+        res = assert_blocked_matches_per_step(mc, pc, trace, cc)
+        assert_matches_oracle(res, mc, cc, pc, trace)
+
+
+def test_fault_heavy_and_free_bitwise():
+    """Faults and a mid-run segment free everywhere: nearly every window
+    takes the per-step fallback; both phase-B engines agree."""
+    mc = tiny_machine()
+    cc = CostConfig()
+    trace = fault_heavy_trace(mc, seed=5, free_at=100)
+    for pc in POLICIES[:2]:
+        for phase_b in ("batched", "sequential"):
+            blk = TieredMemSimulator(mc=mc, cc=cc, pc=pc, engine="blocked",
+                                     block=16, phase_b=phase_b).run(trace)
+            ps = TieredMemSimulator(mc=mc, cc=cc, pc=pc, engine="per_step",
+                                    phase_b=phase_b).run(trace)
+            assert_states_bitwise(blk.final_state, ps.final_state,
+                                  f"{pc.label()}/{phase_b}")
+        assert_matches_oracle(blk, mc, cc, pc, trace)
+
+
+def test_thp_machine_bitwise():
+    mc = tiny_machine(page_order=9)
+    cc = CostConfig()
+    trace = fault_heavy_trace(mc, seed=51)
+    for pc in POLICIES[:2]:
+        res = assert_blocked_matches_per_step(mc, pc, trace, cc)
+        assert_matches_oracle(res, mc, cc, pc, trace)
+
+
+def test_oom_trace_bitwise():
+    """The OOM latch freezes every lane; post-OOM fast windows must stay
+    inert exactly like per-step execution (bind-all pathology)."""
+    mc = tiny_machine(dram_pages_per_node=150, nvmm_pages_per_node=1600,
+                      va_pages=1 << 11, radix_bits=4)
+    cc = CostConfig()
+    T = mc.n_threads
+    s = np.arange(256, dtype=np.int32)[:, None]
+    t = np.arange(T, dtype=np.int32)[None, :]
+    va = np.minimum(s * T + t, mc.va_pages - 1).astype(np.int32)
+    trace = make_trace(mc, va)
+    for ptp in (PT_FOLLOW_DATA, PT_BIND_ALL, PT_BIND_HIGH):
+        pc = PolicyConfig(data_policy=FIRST_TOUCH, pt_policy=ptp,
+                          autonuma=False)
+        res = assert_blocked_matches_per_step(mc, pc, trace, cc)
+        assert_matches_oracle(res, mc, cc, pc, trace)
+        if ptp == PT_BIND_ALL:
+            assert res.summary()["oom_killed"]
+
+
+def test_resume_mid_block():
+    """Splitting a trace in the middle of what the full run tiles as one
+    fast window must not change anything: chained blocked runs equal the
+    unsplit per-step run bit-for-bit."""
+    mc = tiny_machine()
+    pc = POLICIES[0]
+    trace = steady_trace(mc, steps=120, seed=13)
+    full = TieredMemSimulator(mc=mc, pc=pc, engine="per_step").run(trace)
+
+    cut = 75                      # not a multiple of any pow2 block size
+    first = Trace(va=trace.va[:cut], is_write=trace.is_write[:cut],
+                  free_seg=trace.free_seg[:cut], llc=trace.llc[:cut],
+                  seg_of_map=trace.seg_of_map)
+    second = Trace(va=trace.va[cut:], is_write=trace.is_write[cut:],
+                   free_seg=trace.free_seg[cut:], llc=trace.llc[cut:],
+                   seg_of_map=trace.seg_of_map)
+    sim = TieredMemSimulator(mc=mc, pc=pc, engine="blocked", block=16)
+    mid = sim.run(first)
+    state = jax.tree.map(jnp.asarray, mid.final_state)
+    res = sim.run(second, state=state)
+    assert_states_bitwise(res.final_state, full.final_state, "resume")
+    np.testing.assert_array_equal(
+        np.concatenate([mid.timeline["total_cycles"],
+                        res.timeline["total_cycles"]]),
+        full.timeline["total_cycles"])
+
+
+def test_vmapped_sweep_bitwise():
+    """Blocked vs per-step engines lane-for-lane in an 8-lane vmapped
+    sweep (window events are the union across lanes), and blocked sweep
+    lanes vs solo blocked runs."""
+    mc = tiny_machine()
+    cc = CostConfig()
+    trace = fault_heavy_trace(mc, seed=7, free_at=60)
+    pols = [PolicyConfig(data_policy=d, pt_policy=p, autonuma=False)
+            for d in (FIRST_TOUCH, INTERLEAVE)
+            for p in (PT_FOLLOW_DATA, PT_BIND_ALL, PT_BIND_HIGH)]
+    pols += [PolicyConfig(data_policy=d, pt_policy=PT_BIND_HIGH, mig=True,
+                          autonuma=False) for d in (FIRST_TOUCH, INTERLEAVE)]
+    blk = sweep(mc, cc, pols, trace, engine="blocked", block=16)
+    ps = sweep(mc, cc, pols, trace, engine="per_step")
+    for pc, a, b in zip(pols, blk, ps):
+        assert_states_bitwise(a.final_state, b.final_state, pc.label())
+        for k in a.timeline:
+            np.testing.assert_array_equal(a.timeline[k], b.timeline[k],
+                                          err_msg=f"{pc.label()}: tl/{k}")
+        solo = TieredMemSimulator(mc=mc, cc=cc, pc=pc, engine="blocked",
+                                  block=16).run(trace)
+        assert_states_bitwise(a.final_state, solo.final_state,
+                              f"solo/{pc.label()}")
+
+
+def test_window_tiling_shape_independence():
+    """Window shapes depend only on the step count: same steps, wildly
+    different content -> identical xs shapes (the broker-quantization
+    property); pad rows are exactly the tail and map back to S steps."""
+    mc = tiny_machine()
+    pc = POLICIES[0]
+    a, _ = blocked_xs(steady_trace(mc, steps=100, seed=1), mc, pc, block=16)
+    b, vl = blocked_xs(fault_heavy_trace(mc, steps=100, seed=2), mc, pc,
+                       block=16)
+    assert [x.shape for x in a] == [x.shape for x in b]
+    assert a[0].shape[:2] == (7, 16)          # ceil(100/16) windows
+    assert vl.sum() == 100 and vl[:6].all() and not vl[6, 4:].any()
+
+
+def test_alloc_many_conflict_groups_match_full_scan():
+    """The compacted allocator scan == the full T-deep scan on random
+    winner sets, including OOM latching mid-step (committed results, the
+    gates and the carried allocator state; non-acting lanes are
+    don't-care by contract)."""
+    rng = np.random.default_rng(0)
+    T = 16
+    wm = jnp.asarray([5, 5, 5, 5], jnp.int32)
+    for trial in range(20):
+        n_winners = int(rng.integers(0, T + 1))
+        winners = np.zeros(T, bool)
+        winners[rng.choice(T, size=n_winners, replace=False)] = True
+        need_pt = winners[:, None] & (rng.random((T, 4)) < 0.5)
+        need_data = winners & (rng.random(T) < 0.9)
+        free = jnp.asarray(rng.integers(0, 12, 4), jnp.int32)
+        rec = jnp.asarray(rng.integers(0, 3, 4), jnp.int32)
+        ptr = jnp.asarray(int(rng.integers(0, 4)), jnp.int32)
+        oom0 = jnp.asarray(bool(rng.random() < 0.1))
+        dpol = int(rng.choice([FIRST_TOUCH, INTERLEAVE]))
+        ppol = int(rng.choice([PT_FOLLOW_DATA, PT_BIND_ALL, PT_BIND_HIGH]))
+
+        G = pow2ceil(max(n_winners, 1))
+        slot = np.cumsum(winners) - 1
+        slot_thread = np.full(G, T, np.int64)
+        slot_thread[slot[winners]] = np.where(winners)[0]
+
+        args = (free, rec, ptr, oom0, wm, dpol, ppol, T, False,
+                jnp.asarray(need_pt), jnp.asarray(need_data))
+        ref = alloc_mod.alloc_many(*args)
+        got = alloc_mod.alloc_many(*args,
+                                   slot_thread=jnp.asarray(slot_thread))
+        names = ("nodes", "slow", "ok", "act", "gate", "free", "rec",
+                 "ptr", "oom")
+        act = np.asarray(ref[3])
+        for name, r, g in zip(names, ref, got):
+            r, g = np.asarray(r), np.asarray(g)
+            if name in ("nodes", "slow", "ok"):
+                np.testing.assert_array_equal(
+                    np.where(act, r, 0), np.where(act, g, 0),
+                    err_msg=f"trial {trial}: {name}")
+            else:
+                np.testing.assert_array_equal(r, g,
+                                              err_msg=f"trial {trial}: {name}")
+
+
+def test_fault_group_bound_and_block_quantization():
+    mc = tiny_machine()
+    trace = fault_heavy_trace(mc, seed=9)
+    sched = fault_schedule(trace, mc)
+    bound = fault_group_bound(sched)
+    winners = ((sched & SCHED_WINNER) > 0).sum(axis=1)
+    assert bound == max(int(winners.max()), 1)
+    assert pow2ceil(5) == 8 and pow2ceil(8) == 8 and pow2ceil(0) == 1
+    assert DEFAULT_BLOCK == 64

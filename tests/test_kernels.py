@@ -106,6 +106,25 @@ def test_pt_walk_grid_tiling(n, q_block):
     np.testing.assert_array_equal(np.asarray(s), np.asarray(ws))
 
 
+@pytest.mark.parametrize("n,q_block", [
+    (5, 64), (100, 64), (300, 256), (257, 128), (769, 256)])
+def test_pt_walk_non_divisible_n(n, q_block):
+    """N that doesn't divide q_block must pad-and-mask, not assert: the
+    kernel zero-pads queries to a block multiple and slices the results
+    back to N."""
+    n_leaf, fanout = 8, 64
+    upper = jnp.asarray(RNG.permutation(n_leaf), jnp.int32).at[2].set(-1)
+    ltier = jnp.asarray(RNG.integers(0, 2, n_leaf), jnp.int32)
+    lent = jnp.asarray(RNG.integers(0, 64, (n_leaf, fanout)), jnp.int32)
+    vb = jnp.asarray(RNG.integers(0, n_leaf * fanout, n), jnp.int32)
+    t, s = pt_walk_kernel(upper, ltier, lent, vb, q_block=q_block,
+                          interpret=True)
+    assert t.shape == (n,) and s.shape == (n,)
+    wt, ws = _pt_walk_xla(upper, ltier, lent, vb)
+    np.testing.assert_array_equal(np.asarray(t), np.asarray(wt))
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(ws))
+
+
 @pytest.mark.parametrize("P,bs,KH,Dh,M", [
     (8, 8, 1, 128, 1), (16, 16, 2, 128, 5), (32, 8, 4, 256, 12)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

@@ -200,7 +200,7 @@ def stub_exec(monkeypatch):
     flushed = []
 
     def fake_sweep_lanes(mc, ccs, pcs, trs, phase_b="batched", budget=None,
-                         lane_sharding=None):
+                         lane_sharding=None, engine="blocked", **kw):
         flushed.append(len(pcs))
         return [f"result-{len(flushed)}-{i}" for i in range(len(pcs))]
 
@@ -361,6 +361,66 @@ def test_result_cache_lru_bound():
     c.put(("c",), 3)                 # evicts ("b",), the LRU entry
     assert c.get(("b",)) is None and len(c) == 2
     assert c.hits == 1 and c.misses == 1
+
+
+def test_disk_cache_tier_roundtrip_and_byte_cap(tmp_path):
+    from repro.service import DiskCacheTier
+    tier = DiskCacheTier(tmp_path / "d", max_bytes=1 << 20)
+    key = (("m", 4), "batched", "blocked", (1.5, 2), "digest")
+    assert tier.get(key) is None and tier.misses == 1
+    tier.put(key, {"x": np.arange(8)})
+    got = tier.get(key)
+    assert tier.hits == 1
+    np.testing.assert_array_equal(got["x"], np.arange(8))
+    # a fresh tier over the same dir serves the same entry (stable keys)
+    tier2 = DiskCacheTier(tmp_path / "d", max_bytes=1 << 20)
+    assert tier2.get(key) is not None
+    # byte cap evicts oldest-mtime entries
+    small = DiskCacheTier(tmp_path / "s", max_bytes=6000)
+    for i in range(4):
+        small.put((i,), np.zeros(500))   # ~4KB pickled each
+        os.utime(small._file((i,)), (i + 1, i + 1))  # force mtime order
+    small._evict()
+    alive = [i for i in range(4) if small.get((i,)) is not None]
+    assert 0 < len(alive) < 4, "cap must evict some but not all"
+    assert alive == list(range(4 - len(alive), 4)), \
+        "oldest-mtime entries evicted first"
+    assert sum(f.stat().st_size
+               for f in (tmp_path / "s").glob("*.pkl")) <= 6000
+
+
+def test_disk_spilled_cache_serves_fresh_process_with_zero_device_work(
+        tmp_path):
+    """The spill satellite's acceptance: warm the cache through one
+    broker, then rebuild EVERYTHING — broker, ResultCache, query objects
+    (content keys are process-stable: dataclass reprs + digests, no
+    object identity) — over the same spill dir and require the hit to be
+    served without a single flush, lane or XLA compile."""
+    mc = tiny_machine()
+    spec = TraceSpec(workload="xsbench", footprint=64, run_steps=16)
+
+    def fresh_query():
+        return SimQuery(trace=spec, policy=PolicyConfig(autonuma=False),
+                        machine=tiny_machine())
+
+    warm = SimBroker(max_lanes=1,
+                     cache=ResultCache(spill_dir=tmp_path / "cache"))
+    res1 = warm.submit(fresh_query()).result()
+    assert warm.stats.flushes == 1
+
+    cold = SimBroker(max_lanes=1,
+                     cache=ResultCache(spill_dir=tmp_path / "cache"))
+    assert len(cold.cache) == 0, "in-memory tier starts empty"
+    before = sweep_compile_count()
+    fut = cold.submit(fresh_query())
+    assert fut.done() and fut.from_cache
+    assert cold.stats.flushes == 0 and cold.stats.lanes_run == 0
+    assert sweep_compile_count() == before
+    assert cold.cache.disk.hits == 1
+    res2 = fut.result()
+    assert res2.summary() == res1.summary()
+    for k in res1.timeline:
+        np.testing.assert_array_equal(res1.timeline[k], res2.timeline[k])
 
 
 # ---------------------------------------------------------------------------

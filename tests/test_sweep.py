@@ -113,7 +113,10 @@ def test_sweep_matches_sequential_and_oracle():
 def test_sweep_single_compile_per_trace_shape():
     """A >=4-policy sweep costs exactly one lax.scan compilation, and
     re-sweeping the same shape (other policies, other trace data) costs
-    zero more; a new trace shape costs exactly one more."""
+    zero more.  The time-blocked engine tiles steps into fixed windows,
+    so shapes quantize at window granularity: a step count landing in the
+    same window count reuses the program for free, while one that adds a
+    window compiles exactly once more."""
     mc = tiny_machine()
     cc = CostConfig()
     trace = random_trace(mc, seed=11, steps=96)
@@ -128,8 +131,14 @@ def test_sweep_single_compile_per_trace_shape():
     sweep(mc, cc, reordered, random_trace(mc, seed=12, steps=96))
     assert sweep_compile_count() == after_first
 
-    # a new trace shape compiles exactly once more
+    # 96 and 128 steps both tile to two 64-step windows: free reuse
     sweep(mc, cc, POLICIES, random_trace(mc, seed=13, steps=128))
+    assert sweep_compile_count() == after_first
+
+    # a window count not seen before (5 windows — 3 was compiled by an
+    # earlier test in this module) is a genuinely new shape: exactly one
+    # more compile
+    sweep(mc, cc, POLICIES, random_trace(mc, seed=14, steps=320))
     assert sweep_compile_count() == after_first + 1
 
 

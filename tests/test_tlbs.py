@@ -1,0 +1,139 @@
+"""Property tests for the TLB/PWC model in isolation.
+
+``core/tlbs.py`` underpins both phase A and the time-blocked fast
+window's inner scan, but until now was only exercised end-to-end.  Pinned
+here: LRU eviction order with deterministic lowest-way tie-breaking
+(empty slots stamped -1 sort before any age), ``invalidate_matching``
+clearing exactly the matching tags, and the scalar ``update_one`` /
+``lookup_one`` forms agreeing with the batched ones on random request
+streams.
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import tlbs
+
+I32 = jnp.int32
+
+
+def _arr(x):
+    return np.asarray(x)
+
+
+def fill(tlb, thread, tags, start_now=0):
+    now = start_now
+    for tag in tags:
+        t = jnp.full((tlb.tags.shape[0],), -1, I32).at[thread].set(tag)
+        active = jnp.zeros((tlb.tags.shape[0],), bool).at[thread].set(True)
+        hit, way = tlbs.lookup(tlb, t)
+        tlb = tlbs.update(tlb, t, way, jnp.asarray(now, I32), active)
+        now += 1
+    return tlb, now
+
+
+def test_lru_evicts_oldest_then_lowest_way():
+    """A full set evicts the least-recently-used way; a re-touch changes
+    the victim; empty slots always win over any filled way."""
+    tlb = tlbs.make_tlb(n_threads=1, sets=1, ways=4)
+    # empty slots are chosen lowest-way-first
+    for expect_way, tag in enumerate([10, 20, 30, 40]):
+        hit, way = tlbs.lookup(tlb, jnp.asarray([tag], I32))
+        assert not bool(hit[0]) and int(way[0]) == expect_way
+        tlb = tlbs.update(tlb, jnp.asarray([tag], I32), way,
+                          jnp.asarray(expect_way, I32),
+                          jnp.asarray([True]))
+    # touch 10 (way 0) at a later time: 20 (way 1) is now the LRU victim
+    hit, way = tlbs.lookup(tlb, jnp.asarray([10], I32))
+    assert bool(hit[0]) and int(way[0]) == 0
+    tlb = tlbs.update(tlb, jnp.asarray([10], I32), way,
+                      jnp.asarray(7, I32), jnp.asarray([True]))
+    hit, victim = tlbs.lookup(tlb, jnp.asarray([50], I32))
+    assert not bool(hit[0]) and int(victim[0]) == 1
+    tlb = tlbs.update(tlb, jnp.asarray([50], I32), victim,
+                      jnp.asarray(8, I32), jnp.asarray([True]))
+    assert set(_arr(tlb.tags)[0, 0].tolist()) == {10, 50, 30, 40}
+
+
+def test_lru_tie_break_lowest_way():
+    """Equal-age ways (same ``now`` stamp) break ties to the lowest way —
+    the property the pure-Python oracle replicates via argmin."""
+    tlb = tlbs.make_tlb(n_threads=1, sets=1, ways=3)
+    for w, tag in enumerate([1, 2, 3]):
+        tlb = tlbs.update(tlb, jnp.asarray([tag], I32),
+                          jnp.asarray([w]), jnp.asarray(5, I32),
+                          jnp.asarray([True]))
+    _, victim = tlbs.lookup(tlb, jnp.asarray([9], I32))
+    assert int(victim[0]) == 0
+
+
+def test_update_inactive_is_noop():
+    tlb = tlbs.make_tlb(n_threads=2, sets=2, ways=2)
+    tags0 = _arr(tlb.tags).copy()
+    t = jnp.asarray([3, 5], I32)
+    _, way = tlbs.lookup(tlb, t)
+    tlb2 = tlbs.update(tlb, t, way, jnp.asarray(1, I32),
+                       jnp.asarray([False, False]))
+    np.testing.assert_array_equal(_arr(tlb2.tags), tags0)
+    np.testing.assert_array_equal(_arr(tlb2.lru), _arr(tlb.lru))
+
+
+def test_invalidate_matching_only_clears_matching():
+    """Only entries whose shifted tag indexes a set bit die; the rest
+    keep their tags AND their LRU stamps."""
+    tlb = tlbs.make_tlb(n_threads=1, sets=4, ways=2)
+    tags = [0, 1, 5, 9, 14]       # sets 0,1,1,1,2
+    tlb, _ = fill(tlb, 0, tags)
+    flushed = np.zeros(16, bool)
+    flushed[[1, 14]] = True
+    out = tlbs.invalidate_matching(tlb, jnp.asarray(flushed), 0)
+    kept = set(_arr(out.tags).ravel().tolist()) - {-1}
+    assert kept == {0, 5, 9}
+    # survivors keep their LRU stamps, victims are reset to empty (-1)
+    sel = _arr(tlb.tags) == 5
+    assert (_arr(out.lru)[sel] == _arr(tlb.lru)[sel]).all()
+    assert (_arr(out.lru)[_arr(tlb.tags) == 14] == -1).all()
+
+
+def test_invalidate_matching_shifted_tags():
+    """shift=k groups tags by tag>>k — the leaf-PT shootdown form."""
+    tlb = tlbs.make_tlb(n_threads=1, sets=4, ways=4)
+    tlb, _ = fill(tlb, 0, [0, 1, 2, 3, 4, 5, 6, 7])
+    flushed = np.zeros(2, bool)
+    flushed[1] = True             # kill tags with tag>>2 == 1 (4..7)
+    out = tlbs.invalidate_matching(tlb, jnp.asarray(flushed), 2)
+    kept = set(_arr(out.tags).ravel().tolist()) - {-1}
+    assert kept == {0, 1, 2, 3}
+
+
+def test_scalar_forms_match_batched_on_random_streams():
+    """update_one/lookup_one (the sequential fault path) vs the batched
+    update/lookup on identical single-thread request streams."""
+    rng = np.random.default_rng(0)
+    T, sets, ways = 3, 4, 2
+    bat = tlbs.make_tlb(T, sets, ways)
+    sca = tlbs.make_tlb(T, sets, ways)
+    for now in range(80):
+        thread = int(rng.integers(T))
+        tag = int(rng.integers(0, 24))
+        active = bool(rng.random() < 0.9)
+        t_vec = jnp.full((T,), -1, I32).at[thread].set(tag)
+        act_vec = jnp.zeros((T,), bool).at[thread].set(active)
+        hit_b, way_b = tlbs.lookup(bat, t_vec)
+        bat = tlbs.update(bat, t_vec, way_b, jnp.asarray(now, I32), act_vec)
+        hit_s = tlbs.lookup_one(sca, jnp.asarray(thread), jnp.asarray(tag))
+        assert bool(hit_s) == bool(hit_b[thread]), f"step {now}"
+        sca = tlbs.update_one(sca, jnp.asarray(thread), jnp.asarray(tag),
+                              jnp.asarray(now, I32), jnp.asarray(active))
+        np.testing.assert_array_equal(_arr(bat.tags)[thread],
+                                      _arr(sca.tags)[thread],
+                                      err_msg=f"step {now}")
+        np.testing.assert_array_equal(_arr(bat.lru)[thread],
+                                      _arr(sca.lru)[thread],
+                                      err_msg=f"step {now}")
+
+
+def test_flush_all():
+    tlb = tlbs.make_tlb(2, 2, 2)
+    tlb, _ = fill(tlb, 0, [1, 2, 3])
+    out = tlbs.flush_all(tlb)
+    assert (_arr(out.tags) == -1).all() and (_arr(out.lru) == -1).all()
