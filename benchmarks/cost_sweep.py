@@ -1,4 +1,4 @@
-"""CXL what-if cost sweep: NVMM:DRAM latency ratios through ONE program.
+"""CXL what-if cost sweep + the N-tier scenario-matrix driver.
 
 The paper's slow tier is Optane (reads 3x DRAM, writes 4x).  CXL-attached
 memory spans a wide latency band — roughly 1.5x (direct CXL DRAM) to 4x+
@@ -14,6 +14,19 @@ re-running the sweep is answered from the result cache.
 Emits ``artifacts/bench/cost_sweep.json``: per ratio, both policies'
 cycle metrics plus BHi's improvement — showing how the PT-placement win
 grows with the slow tier's latency disadvantage.
+
+``scenario_main`` (registered as ``scenario_matrix`` in
+``benchmarks.run``) is the N-tier generalization: the full
+
+    policy family x tier topology x latency ratio x workload
+
+matrix through the broker.  Families are the migration algorithms
+(AutoNUMA, AutoNUMA+BHi+Mig, TPP, Nomad), topologies the classic 2-tier
+DRAM/NVMM box and the 3-tier DRAM/CXL/NVMM one, and every cell is an
+ordinary SimQuery so the whole matrix compiles once per (tier topology,
+trace shape) bucket — asserted in the emitted
+``artifacts/bench/scenario_matrix.json`` (``compile_check``), which CI
+regenerates with ``--quick`` and uploads.
 """
 from __future__ import annotations
 
@@ -21,9 +34,10 @@ import dataclasses
 import time
 
 from . import common
-from repro.core import (CostConfig, INTERLEAVE, PT_BIND_HIGH,
+from repro.core import (CostConfig, INTERLEAVE, MachineConfig, PT_BIND_HIGH,
                         PT_FOLLOW_DATA, PolicyConfig, TraceSpec,
-                        benchmark_machine)
+                        benchmark_machine, bhi_mig, cxl_machine,
+                        linux_default, nomad, tpp)
 from repro.service import SimBroker, SimQuery
 
 RATIOS = (1.5, 2.0, 3.0, 4.0, 6.0, 8.0)
@@ -99,6 +113,141 @@ def main(quick: bool = False):
     }
     common.emit(rows)
     common.save_artifact("cost_sweep", results)
+    return results
+
+
+# ---------------------------------------------------------------------------
+# Scenario matrix: policy family x tier topology x latency ratio x workload
+# ---------------------------------------------------------------------------
+
+SCENARIO_RATIOS = (2.0, 3.0, 6.0)
+SCENARIO_WORKLOADS = ("memcached", "xsbench")
+
+
+def scenario_machines(quick: bool):
+    """The tier topologies under study.  Quick mode shrinks capacities
+    with the DRAM-pressure ratio preserved (footprint must exceed DRAM or
+    the migration families never engage)."""
+    if quick:
+        shrink = dict(va_pages=1 << 13, radix_bits=6)
+        return {
+            "2tier": MachineConfig(dram_pages_per_node=1200,
+                                   nvmm_pages_per_node=4800, **shrink),
+            "3tier_cxl": MachineConfig(
+                tier_pages_per_node=(1200, 2400, 4800), **shrink),
+        }
+    return {"2tier": benchmark_machine(), "3tier_cxl": cxl_machine()}
+
+
+def scenario_cost(ratio: float) -> CostConfig:
+    """One latency knob per scenario: the slowest tier's read latency is
+    ``ratio`` x DRAM (write 4/3 of that, the Optane proportion) and any
+    middle (CXL) tier sits halfway between DRAM and the slow tier."""
+    base = CostConfig()
+    return CostConfig(
+        nvmm_read=int(base.dram_read * ratio),
+        nvmm_write=int(base.dram_write * ratio * 4 / 3),
+        cxl_read=int(base.dram_read * (1 + ratio) / 2),
+        cxl_write=int(base.dram_write * (1 + ratio) / 2))
+
+
+def scenario_families(quick: bool = False):
+    """The migration-policy families of the N-tier model (first-touch
+    data placement throughout so the families differ only in how the
+    periodic scan balances the tiers).  Quick mode shortens the scan
+    period to match its shorter traces, or no scan would ever fire."""
+    fams = {
+        "autonuma": linux_default(),
+        "autonuma+BHi+Mig": bhi_mig(),
+        "tpp": tpp(demote_wm=0.02),
+        "nomad": nomad(),
+    }
+    if quick:
+        fams = {k: dataclasses.replace(p, autonuma_period=64,
+                                       autonuma_budget=128)
+                for k, p in fams.items()}
+    return fams
+
+
+def scenario_main(quick: bool = False):
+    machines = scenario_machines(quick)
+    families = scenario_families(quick)
+    ratios = (3.0,) if quick else SCENARIO_RATIOS
+    wls = SCENARIO_WORKLOADS[:1] if quick else SCENARIO_WORKLOADS
+    fp, run_steps = ((1 << 13), 128) if quick else (common.FOOTPRINT, 4096)
+
+    cells = [(topo, r, wl, fam)
+             for topo in machines for r in ratios for wl in wls
+             for fam in families]
+    queries = [SimQuery(trace=TraceSpec(workload=wl, footprint=fp,
+                                        run_steps=run_steps),
+                        policy=families[fam], cost=scenario_cost(r),
+                        machine=machines[topo])
+               for topo, r, wl, fam in cells]
+
+    broker = SimBroker(max_lanes=len(queries), lane_sharding="auto")
+    # one compile per (tier topology, trace shape) bucket — the broker's
+    # own quantization; computed up front so the emitted artifact can
+    # assert the whole matrix really shared that few programs
+    expected_compiles = len({broker._bucket_key(q, broker.canonical_trace(q))
+                             for q in queries})
+
+    t0 = time.time()
+    res = broker.run(queries)
+    secs = time.time() - t0
+
+    results: dict = {}
+    for (topo, rat, wl, fam), r in zip(cells, res):
+        ratio = f"{rat:g}x"
+        s = r.summary()
+        cell = {k: s[k] for k in
+                ("runtime_cycles", "total_cycles", "walk_cycles",
+                 "stall_cycles", "walk_share", "faults", "data_migrations",
+                 "demotions", "nomad_retries", "nomad_flip_demotions",
+                 "shadow_pages")}
+        cell["data_pages_per_tier"] = s["data_pages_per_tier"]
+        cell["leaf_pages_per_tier"] = s["leaf_pages_per_tier"]
+        results.setdefault(topo, {}).setdefault(ratio, {}) \
+               .setdefault(wl, {})[fam] = cell
+
+    rows = []
+    for topo in machines:
+        for ratio in results[topo]:
+            for wl in results[topo][ratio]:
+                by_fam = results[topo][ratio][wl]
+                base = by_fam["autonuma"]["total_cycles"]
+                for fam, cell in by_fam.items():
+                    cell["improv_vs_autonuma"] = common.improvement(
+                        base, cell["total_cycles"])
+                best = max(by_fam, key=lambda f:
+                           by_fam[f]["improv_vs_autonuma"])
+                rows.append((
+                    f"scenario_matrix/{topo}/{ratio}/{wl}",
+                    secs / len(cells),
+                    f"best={best};"
+                    f"best_improv={by_fam[best]['improv_vs_autonuma']:.2f}%;"
+                    f"tpp_demotions={by_fam['tpp']['demotions']:.0f};"
+                    f"nomad_retries={by_fam['nomad']['nomad_retries']:.0f}"))
+
+    compile_check = {"expected": expected_compiles,
+                     "actual": broker.stats.compiles,
+                     "ok": broker.stats.compiles == expected_compiles}
+    results["_meta"] = {
+        "quick": quick, "footprint": fp, "run_steps": run_steps,
+        "seconds": secs, "lanes": len(cells),
+        "topologies": {t: list(m.tier_capacities)
+                       for t, m in machines.items()},
+        "ratios": [f"{r:g}x" for r in ratios], "workloads": list(wls),
+        "families": list(families),
+        "compile_check": compile_check,
+        "broker_stats": broker.stats.as_dict(),
+    }
+    common.emit(rows)
+    common.save_artifact("scenario_matrix", results)
+    assert compile_check["ok"], (
+        f"scenario matrix recompiled: expected one compile per (tier "
+        f"topology, trace shape) bucket = {expected_compiles}, "
+        f"got {broker.stats.compiles}")
     return results
 
 

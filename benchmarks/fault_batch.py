@@ -44,10 +44,11 @@ def bench_trace(mc, tr, pols, cc):
         for mode in ("sequential", "batched"):
             if lanes == 1:
                 sim = TieredMemSimulator(mc=mc, cc=cc, pc=pols[0],
-                                         phase_b=mode)
+                                         phase_b=mode, debug=True)
                 secs = _timed(lambda: sim.run(tr))
             else:
-                secs = _timed(lambda: sweep(mc, cc, pols, tr, phase_b=mode))
+                secs = _timed(lambda: sweep(mc, cc, pols, tr, phase_b=mode,
+                                            debug=True))
             row[mode] = {"seconds": secs,
                          "lane_steps_per_sec": tr.n_steps * lanes / secs}
         row["speedup"] = (row["batched"]["lane_steps_per_sec"]

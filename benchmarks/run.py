@@ -15,8 +15,9 @@ import sys
 import time
 import traceback
 
-# name -> (module basename, one-line description); import is deferred so
-# --help and --only validation stay instant.
+# name -> (module basename[:entry function], one-line description); import
+# is deferred so --help and --only validation stay instant.  The entry
+# function defaults to ``main`` and takes ``quick: bool``.
 FIGURES = {
     "fig1": ("fig1_startup", "startup/populate-phase cost breakdown"),
     "fig5": ("fig5_ptdist", "PT-page NUMA distribution"),
@@ -33,6 +34,9 @@ FIGURES = {
     "steady_state": ("steady_state",
                      "time-blocked steady-state stepper micro-benchmark"),
     "cost_sweep": ("cost_sweep", "CXL what-if NVMM latency-ratio sweep"),
+    "scenario_matrix": ("cost_sweep:scenario_main",
+                        "policy family x tier topology x latency ratio x "
+                        "workload matrix through the broker"),
     "service_throughput": ("service_throughput",
                            "query-broker throughput vs naive execution"),
 }
@@ -63,10 +67,12 @@ def main() -> None:
     print("name,seconds,derived", flush=True)
     failures = []
     for name in names:
-        mod = importlib.import_module(f"benchmarks.{FIGURES[name][0]}")
+        target = FIGURES[name][0]
+        modname, _, func = target.partition(":")
+        mod = importlib.import_module(f"benchmarks.{modname}")
         t0 = time.time()
         try:
-            mod.main(quick=args.quick)
+            getattr(mod, func or "main")(quick=args.quick)
             print(f"{name}/done,{time.time() - t0:.1f},ok", flush=True)
         except Exception as e:  # noqa: BLE001 — report, keep going
             failures.append(name)

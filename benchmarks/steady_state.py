@@ -37,10 +37,11 @@ def bench_trace(mc, tr, pols, cc):
         for engine in ("per_step", "blocked"):
             if lanes == 1:
                 sim = TieredMemSimulator(mc=mc, cc=cc, pc=pols[0],
-                                         engine=engine)
+                                         engine=engine, debug=True)
                 secs = _timed(lambda: sim.run(tr))
             else:
-                secs = _timed(lambda: sweep(mc, cc, pols, tr, engine=engine))
+                secs = _timed(lambda: sweep(mc, cc, pols, tr, engine=engine,
+                                            debug=True))
             row[engine] = {"seconds": secs,
                            "lane_steps_per_sec": tr.n_steps * lanes / secs}
         row["speedup"] = (row["blocked"]["lane_steps_per_sec"]

@@ -4,8 +4,10 @@ Faithful JAX reproduction of "Page Table Management for Heterogeneous
 Memory Systems" (Kumar et al., 2021).  See DESIGN.md section 2, Pillar A.
 """
 from .config import (CostConfig, MachineConfig, PolicyConfig, FIRST_TOUCH,
-                     INTERLEAVE, PT_BIND_ALL, PT_BIND_HIGH, PT_FOLLOW_DATA,
-                     benchmark_machine, bhi, bhi_mig, bind_all, linux_default)
+                     INTERLEAVE, MIG_AUTONUMA, MIG_NOMAD, MIG_TPP,
+                     PT_BIND_ALL, PT_BIND_HIGH, PT_FOLLOW_DATA,
+                     benchmark_machine, bhi, bhi_mig, bind_all, cxl_machine,
+                     linux_default, nomad, tpp)
 from .sim import (RunResult, TieredMemSimulator, Trace, fault_schedule,
                   fault_step_mask, pad_trace)
 from .state import SimState, init_state, is_dram, same_tier
@@ -16,8 +18,10 @@ from . import workloads
 
 __all__ = [
     "CostConfig", "MachineConfig", "PolicyConfig", "FIRST_TOUCH",
-    "INTERLEAVE", "PT_BIND_ALL", "PT_BIND_HIGH", "PT_FOLLOW_DATA",
-    "benchmark_machine", "bhi", "bhi_mig", "bind_all", "linux_default",
+    "INTERLEAVE", "MIG_AUTONUMA", "MIG_NOMAD", "MIG_TPP",
+    "PT_BIND_ALL", "PT_BIND_HIGH", "PT_FOLLOW_DATA",
+    "benchmark_machine", "bhi", "bhi_mig", "bind_all", "cxl_machine",
+    "linux_default", "nomad", "tpp",
     "RunResult", "TieredMemSimulator", "Trace", "TraceSpec",
     "fault_schedule", "fault_step_mask", "lane_mesh",
     "pad_trace", "SimState", "init_state", "is_dram", "same_tier",

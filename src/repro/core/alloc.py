@@ -8,9 +8,10 @@ Mirrors the Linux buddy-allocator behaviors the paper measures:
   * OOM when a *bound* allocation (PT bind-all) cannot be satisfied from the
     allowed nodes even after reclaim (paper section 3.5, Fig. 7).
 
-Allocation preferences are length-4 node orders with -1 padding, so the same
-scalar routine serves first-touch (local DRAM -> remote DRAM -> local NVMM ->
-remote NVMM), interleave (rotating start node), and DRAM-only binds.
+Allocation preferences are length-``n_nodes`` node orders with -1 padding, so
+the same scalar routine serves first-touch (local then remote node of each
+tier, fastest tier first), interleave (rotating start over the allocatable
+nodes), and DRAM-only binds.
 """
 from __future__ import annotations
 
@@ -30,36 +31,50 @@ def watermark_pages(mc: MachineConfig) -> jax.Array:
     return (cap * mc.low_watermark).astype(I32)
 
 
-def first_touch_prefs(thread: jax.Array, n_threads: int) -> jax.Array:
-    """Zonelist order for a thread: its socket's DRAM, remote DRAM, local
-    NVMM, remote NVMM (paper Fig. 2 topology)."""
-    local = jnp.where(thread < n_threads // 2, 0, 1).astype(I32)
-    return jnp.stack([local, 1 - local, local + 2, 3 - local])
+def first_touch_prefs(thread: jax.Array, mc: MachineConfig) -> jax.Array:
+    """Zonelist order for a thread: local then remote node of each tier,
+    fastest tier first (paper Fig. 2 topology; tiers beyond DRAM extend
+    the classic local-DRAM, remote-DRAM, local-NVMM, remote-NVMM order)."""
+    local = jnp.where(thread < mc.n_threads // 2, 0, 1).astype(I32)
+    pairs = []
+    for t in range(mc.n_tiers):
+        pairs.append(2 * t + local)
+        pairs.append(2 * t + (1 - local))
+    return jnp.stack(pairs)
 
 
-def interleave_prefs(ptr: jax.Array) -> jax.Array:
-    """Round-robin start node with wrap-around fallback."""
-    start = (ptr % 4).astype(I32)
-    return (start + jnp.arange(4, dtype=I32)) % 4
+def interleave_prefs(ptr: jax.Array, mc: MachineConfig) -> jax.Array:
+    """Round-robin start node with wrap-around fallback.  Rotates over the
+    *allocatable* nodes only, so zero-capacity middle tiers never perturb
+    the round-robin order (-1 pads to the machine's n_nodes)."""
+    alloc = jnp.asarray(mc.alloc_nodes, I32)
+    a = len(mc.alloc_nodes)
+    start = (ptr % a).astype(I32)
+    prefs = alloc[(start + jnp.arange(a, dtype=I32)) % a]
+    if a < mc.n_nodes:
+        prefs = jnp.concatenate(
+            [prefs, jnp.full((mc.n_nodes - a,), -1, I32)])
+    return prefs
 
 
-def dram_prefs(thread: jax.Array, n_threads: int) -> jax.Array:
+def dram_prefs(thread: jax.Array, mc: MachineConfig) -> jax.Array:
     """DRAM-only preference (for PT binds); -1 entries are invalid."""
-    local = jnp.where(thread < n_threads // 2, 0, 1).astype(I32)
-    return jnp.stack([local, 1 - local,
-                      jnp.asarray(-1, I32), jnp.asarray(-1, I32)])
+    local = jnp.where(thread < mc.n_threads // 2, 0, 1).astype(I32)
+    pad = [jnp.asarray(-1, I32)] * (mc.n_nodes - 2)
+    return jnp.stack([local, 1 - local] + pad)
 
 
 def alloc_one(node_free: jax.Array, node_reclaimable: jax.Array,
               prefs: jax.Array, wm: jax.Array, ignore_wm: jax.Array
               ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
-    """Allocate a single page following ``prefs`` (i32[4], -1 = skip).
+    """Allocate a single page following ``prefs`` (i32[n_nodes], -1 = skip).
 
     Returns (node, slow, new_free, new_reclaimable, ok).  ``node`` is -1 on
     failure.  ``slow`` flags the watermark slow path (or a reclaim), charged
     ``alloc_slow`` cycles by the caller.  Deterministic: first acceptable
     node in preference order wins.
     """
+    n = node_free.shape[0]
     valid = prefs >= 0
     safe_prefs = jnp.where(valid, prefs, 0)
     free_p = jnp.where(valid, node_free[safe_prefs], -1)
@@ -85,25 +100,26 @@ def alloc_one(node_free: jax.Array, node_reclaimable: jax.Array,
     slow = ok & ~fast_ok
     from_reclaim = ok & ~fast_ok & ~slow_ok
 
-    dec = jnp.zeros((4,), I32).at[jnp.clip(node, 0, 3)].add(
+    dec = jnp.zeros((n,), I32).at[jnp.clip(node, 0, n - 1)].add(
         jnp.where(ok & ~from_reclaim, 1, 0))
-    dec_rec = jnp.zeros((4,), I32).at[jnp.clip(node, 0, 3)].add(
+    dec_rec = jnp.zeros((n,), I32).at[jnp.clip(node, 0, n - 1)].add(
         jnp.where(from_reclaim, 1, 0))
     return node, slow, node_free - dec, node_reclaimable - dec_rec, ok
 
 
-def data_prefs_for(data_policy: jax.Array, thread: jax.Array, n_threads: int,
+def data_prefs_for(data_policy: jax.Array, thread: jax.Array,
+                   mc: MachineConfig,
                    interleave_ptr: jax.Array) -> jax.Array:
     """Zonelist for a data-page allocation.  ``data_policy`` may be a traced
     int32 policy code (a vmap policy sweep), so both orders are computed and
     selected."""
     interleave = jnp.asarray(data_policy) == INTERLEAVE
-    return jnp.where(interleave, interleave_prefs(interleave_ptr),
-                     first_touch_prefs(thread, n_threads))
+    return jnp.where(interleave, interleave_prefs(interleave_ptr, mc),
+                     first_touch_prefs(thread, mc))
 
 
 def pt_prefs_for(pt_policy: jax.Array, level_is_upper: bool, thread: jax.Array,
-                 n_threads: int, data_prefs: jax.Array,
+                 mc: MachineConfig, data_prefs: jax.Array,
                  thp: bool) -> Tuple[jax.Array, jax.Array]:
     """Preference order for a PT page allocation.
 
@@ -116,7 +132,7 @@ def pt_prefs_for(pt_policy: jax.Array, level_is_upper: bool, thread: jax.Array,
     bound = (pt_policy == PT_BIND_ALL) | \
         ((pt_policy == PT_BIND_HIGH) & (level_is_upper or thp))
     # Linux default: PT pages follow the data-page policy (paper section 3.2).
-    prefs = jnp.where(bound, dram_prefs(thread, n_threads), data_prefs)
+    prefs = jnp.where(bound, dram_prefs(thread, mc), data_prefs)
     return prefs, bound
 
 
@@ -129,8 +145,8 @@ _LEVEL_IS_UPPER = (True, True, True, False)
 
 def alloc_many(node_free: jax.Array, node_reclaimable: jax.Array,
                interleave_ptr: jax.Array, oom_killed: jax.Array,
-               wm: jax.Array, data_policy, pt_policy, n_threads: int,
-               thp: bool, need_pt: jax.Array, need_data: jax.Array,
+               wm: jax.Array, data_policy, pt_policy, mc: MachineConfig,
+               need_pt: jax.Array, need_data: jax.Array,
                slot_thread=None):
     """Batched fault allocator: hand out pages to a whole thread vector.
 
@@ -177,6 +193,7 @@ def alloc_many(node_free: jax.Array, node_reclaimable: jax.Array,
     """
     data_policy = jnp.asarray(data_policy)
     pt_policy = jnp.asarray(pt_policy)
+    thp = mc.page_order > 0
     is_follow = pt_policy == PT_FOLLOW_DATA
     is_interleave = data_policy == INTERLEAVE
     no_wm = jnp.asarray(False)
@@ -189,8 +206,8 @@ def alloc_many(node_free: jax.Array, node_reclaimable: jax.Array,
         for lvl in range(4):
             is_upper = _LEVEL_IS_UPPER[lvl]
             act = needs[lvl] & gate
-            dprefs = data_prefs_for(data_policy, t, n_threads, ptr)
-            prefs, ign = pt_prefs_for(pt_policy, is_upper, t, n_threads,
+            dprefs = data_prefs_for(data_policy, t, mc, ptr)
+            prefs, ign = pt_prefs_for(pt_policy, is_upper, t, mc,
                                       dprefs, thp)
             node, slow, nf, nr, ok = alloc_one(free, rec, prefs, wm, ign)
             if is_upper or thp:
@@ -215,7 +232,7 @@ def alloc_many(node_free: jax.Array, node_reclaimable: jax.Array,
             oks.append(ok), acts.append(act)
 
         act_d = need_d & gate
-        dprefs = data_prefs_for(data_policy, t, n_threads, ptr)
+        dprefs = data_prefs_for(data_policy, t, mc, ptr)
         node, slow, nf, nr, ok = alloc_one(free, rec, dprefs, wm, no_wm)
         do = act_d & ok
         free = jnp.where(do, nf, free)

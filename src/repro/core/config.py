@@ -6,17 +6,27 @@ DRAM-backed NUMA nodes (0, 1) and two NVMM (Optane)-backed no-CPU NUMA nodes
 paper's 384 GB DRAM / 1.6 TB Optane so that whole-workload simulations run in
 seconds on CPU while preserving the ratios that drive the paper's results
 (DRAM : total ~= 19%, workload RSS > DRAM, NVMM read latency = 3x DRAM).
+
+The machine generalizes to N tiers (``tier_pages_per_node``): a 2-socket box
+always has two NUMA nodes per tier, numbered tier-major — tier 0 (DRAM) is
+nodes 0/1, tier 1 the next pair, and so on down to the slowest tier.  The
+2-tier DRAM/NVMM default is the degenerate case, and an N-tier machine whose
+middle tiers have zero capacity reproduces the 2-tier machine bit-for-bit
+(``tests/test_ntier.py``).  Middle tiers use the ``cxl_read``/``cxl_write``
+latencies (CXL-attached expansion memory); tier 0 uses the DRAM latencies and
+the slowest tier the NVMM ones.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple, Union
+from typing import Optional, Tuple, Union
 
 import jax
 
 N_NODES = 4
 DRAM_NODES = (0, 1)
 NVMM_NODES = (2, 3)
+NODES_PER_TIER = 2            # 2-socket box: one node per socket per tier
 
 # Policies are integer codes so a PolicyConfig can hold either plain Python
 # ints (single run) or traced/stacked int32 arrays (a vmap policy sweep —
@@ -32,13 +42,24 @@ PT_FOLLOW_DATA = 10  # Linux default: same policy as data pages
 PT_BIND_ALL = 11     # LKML patch [36]: whole page table in DRAM
 PT_BIND_HIGH = 12    # Radiant BHi: L1-L3 in DRAM, L4 follows data
 
+# Migration policy families (which algorithm the periodic balancing scan
+# runs; ``PolicyConfig.autonuma`` switches the scan itself on/off):
+MIG_AUTONUMA = 20  # Linux AutoNUMA: hint-fault promotion, optional exchange
+MIG_TPP = 21       # TPP (CXL tiered memory): active/inactive LRU split,
+#                    demotion to the next-slower tier ahead of reclaim
+MIG_NOMAD = 22     # Nomad: transactional page migration (abort + retry on a
+#                    concurrent write) with non-exclusive shadow copies
+
 # Legacy string spellings still accepted by PolicyConfig and kept for
 # display purposes.
 DATA_POLICY_NAMES = {FIRST_TOUCH: "first_touch", INTERLEAVE: "interleave"}
 PT_POLICY_NAMES = {PT_FOLLOW_DATA: "follow_data", PT_BIND_ALL: "bind_all",
                    PT_BIND_HIGH: "bind_high"}
+MIG_POLICY_NAMES = {MIG_AUTONUMA: "autonuma", MIG_TPP: "tpp",
+                    MIG_NOMAD: "nomad"}
 _POLICY_CODES = {name: code
-                 for names in (DATA_POLICY_NAMES, PT_POLICY_NAMES)
+                 for names in (DATA_POLICY_NAMES, PT_POLICY_NAMES,
+                               MIG_POLICY_NAMES)
                  for code, name in names.items()}
 
 
@@ -50,6 +71,14 @@ class MachineConfig:
     # Pages per node.  Defaults: DRAM 2*49152 = 96 Ki pages, NVMM 2*204800.
     dram_pages_per_node: int = 49152
     nvmm_pages_per_node: int = 204800
+    # N-tier generalization: pages per node of each tier, fastest first
+    # (DRAM, CXL..., NVMM).  ``None`` means the classic 2-tier machine
+    # built from the two fields above.  Every tier contributes two NUMA
+    # nodes (one per socket), numbered tier-major: tier t owns nodes
+    # (2t, 2t+1).  A middle tier may have zero capacity — its nodes are
+    # never allocatable and the machine behaves bit-identically to one
+    # without that tier (guarded by tests/test_ntier.py).
+    tier_pages_per_node: Optional[Tuple[int, ...]] = None
     va_pages: int = 1 << 18            # virtual address space, 4 KiB pages
     page_order: int = 0                # 0 => base pages; radix_bits => THP
 
@@ -84,9 +113,50 @@ class MachineConfig:
     # literal lock granularity.
     lock_domain_shift: int = 1
 
-    def node_capacity(self) -> Tuple[int, int, int, int]:
-        d, n = self.dram_pages_per_node, self.nvmm_pages_per_node
-        return (d, d, n, n)
+    def __post_init__(self):
+        if self.tier_pages_per_node is not None:
+            tiers = tuple(int(c) for c in self.tier_pages_per_node)
+            if len(tiers) < 2:
+                raise ValueError(
+                    f"tier_pages_per_node needs >= 2 tiers, got {tiers}")
+            if tiers[0] <= 0 or tiers[-1] <= 0:
+                raise ValueError(
+                    "the fastest and slowest tiers must have capacity; "
+                    f"got {tiers}")
+            object.__setattr__(self, "tier_pages_per_node", tiers)
+
+    @property
+    def tier_capacities(self) -> Tuple[int, ...]:
+        """Pages per node of each tier, fastest (DRAM) first."""
+        if self.tier_pages_per_node is not None:
+            return self.tier_pages_per_node
+        return (self.dram_pages_per_node, self.nvmm_pages_per_node)
+
+    @property
+    def n_tiers(self) -> int:
+        return len(self.tier_capacities)
+
+    @property
+    def n_nodes(self) -> int:
+        return NODES_PER_TIER * self.n_tiers
+
+    @property
+    def tier_of_node(self) -> Tuple[int, ...]:
+        """Tier index per NUMA node (node 2t and 2t+1 belong to tier t)."""
+        return tuple(t for t in range(self.n_tiers)
+                     for _ in range(NODES_PER_TIER))
+
+    @property
+    def alloc_nodes(self) -> Tuple[int, ...]:
+        """Nodes with nonzero capacity, ascending — the interleave
+        rotation runs over these, so zero-capacity middle tiers never
+        perturb the round-robin order."""
+        caps = self.tier_capacities
+        return tuple(n for n in range(self.n_nodes)
+                     if caps[n // NODES_PER_TIER] > 0)
+
+    def node_capacity(self) -> Tuple[int, ...]:
+        return tuple(self.tier_capacities[t] for t in self.tier_of_node)
 
     @property
     def map_shift(self) -> int:
@@ -135,6 +205,10 @@ class CostConfig:
     nvmm_read: int = 750               # 3x DRAM (paper observation 2)
     dram_write: int = 250
     nvmm_write: int = 1000             # 4x DRAM
+    # Middle (CXL-attached) tiers on an N-tier machine; unused on the
+    # classic 2-tier box.  ~1.8x DRAM read matches reported CXL adder.
+    cxl_read: int = 450
+    cxl_write: int = 500
     llc_hit: int = 40
     stlb_hit: int = 10
     cpu_work: int = 60                 # non-memory work per access (IPC proxy)
@@ -194,12 +268,26 @@ class PolicyConfig:
     autonuma_threshold: Union[int, jax.Array] = 1   # min recent accesses to be "hot"
     autonuma_exchange: Union[bool, jax.Array] = True  # demote cold DRAM pages
 
+    # Which migration algorithm the periodic scan runs (MIG_AUTONUMA |
+    # MIG_TPP | MIG_NOMAD).  TPP splits pages into active/inactive by the
+    # recent-access count and demotes inactive pages to the *next-slower*
+    # tier ahead of reclaim pressure; Nomad migrates transactionally —
+    # a promotion aborts (and retries next scan) if the page saw a
+    # concurrent write, and committed promotions keep a non-exclusive
+    # shadow copy on the source tier that a later demotion can flip to
+    # for free.
+    mig_policy: Union[int, jax.Array] = MIG_AUTONUMA
+    # TPP only: extra fraction of tier-0 capacity the demotion path keeps
+    # free beyond the low watermark (the "demotion watermark").
+    tpp_demote_wm: Union[float, jax.Array] = 0.0
+
     def __post_init__(self):
         # Normalize legacy string spellings and validate concrete codes;
         # traced/stacked array leaves (pytree unflatten, sweeps) pass
         # through untouched.
         for f, valid in (("data_policy", DATA_POLICY_NAMES),
-                         ("pt_policy", PT_POLICY_NAMES)):
+                         ("pt_policy", PT_POLICY_NAMES),
+                         ("mig_policy", MIG_POLICY_NAMES)):
             v = getattr(self, f)
             if isinstance(v, str):
                 if v not in _POLICY_CODES or _POLICY_CODES[v] not in valid:
@@ -220,6 +308,10 @@ class PolicyConfig:
             bits.append("Mig")
         if not self.autonuma:
             bits.append("noAutoNUMA")
+        if self.mig_policy == MIG_TPP:
+            bits.append("TPP")
+        elif self.mig_policy == MIG_NOMAD:
+            bits.append("Nomad")
         return "+".join(bits)
 
 
@@ -266,3 +358,27 @@ def bhi(data_policy: str = FIRST_TOUCH, autonuma: bool = True) -> PolicyConfig:
 def bhi_mig(data_policy: str = FIRST_TOUCH, autonuma: bool = True) -> PolicyConfig:
     return PolicyConfig(data_policy=data_policy, pt_policy=PT_BIND_HIGH,
                         mig=True, autonuma=autonuma)
+
+
+def tpp(data_policy: str = FIRST_TOUCH, demote_wm: float = 0.02,
+        **kw) -> PolicyConfig:
+    """TPP-style tiering: active/inactive split + headroom demotion."""
+    return PolicyConfig(data_policy=data_policy, pt_policy=PT_FOLLOW_DATA,
+                        mig=False, autonuma=True, mig_policy=MIG_TPP,
+                        tpp_demote_wm=demote_wm, **kw)
+
+
+def nomad(data_policy: str = FIRST_TOUCH, **kw) -> PolicyConfig:
+    """Nomad-style transactional migration with shadow copies."""
+    return PolicyConfig(data_policy=data_policy, pt_policy=PT_FOLLOW_DATA,
+                        mig=False, autonuma=True, mig_policy=MIG_NOMAD, **kw)
+
+
+def cxl_machine(n_threads: int = 32, cxl_pages_per_node: int = 98304,
+                thp: bool = False) -> MachineConfig:
+    """3-tier DRAM + CXL + NVMM benchmark machine (tier-major nodes 0-5)."""
+    return MachineConfig(n_threads=n_threads, radix_bits=6,
+                         va_pages=1 << 18,
+                         tier_pages_per_node=(49152, cxl_pages_per_node,
+                                              204800),
+                         page_order=6 if thp else 0)

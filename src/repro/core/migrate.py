@@ -30,19 +30,42 @@ import jax
 import jax.numpy as jnp
 
 from . import tlbs
-from .config import CostConfig, MachineConfig, PolicyConfig
-from .state import SimState, is_dram, same_tier
+from .config import (MIG_NOMAD, MIG_TPP, CostConfig, MachineConfig,
+                     PolicyConfig)
+from .state import SimState, is_dram
 
 I32 = jnp.int32
 F32 = jnp.float32
 
 
-def _read_lat(cc: CostConfig, node: jax.Array) -> jax.Array:
-    return jnp.where(is_dram(node), cc.dram_read, cc.nvmm_read).astype(F32)
+def tier_ext(mc: MachineConfig) -> jax.Array:
+    """i32[n_nodes+1] tier per node, indexed by ``node + 1`` so node -1
+    (unallocated) maps to the slowest tier — matching the classic
+    ``is_dram(-1) -> NVMM latency`` convention."""
+    return jnp.asarray((mc.n_tiers - 1,) + mc.tier_of_node, I32)
 
 
-def _write_lat(cc: CostConfig, node: jax.Array) -> jax.Array:
-    return jnp.where(is_dram(node), cc.dram_write, cc.nvmm_write).astype(F32)
+def tier_read_lat(cc: CostConfig, mc: MachineConfig) -> jax.Array:
+    """f32[n_tiers] read latency per tier: DRAM, CXL..., NVMM."""
+    vals = [jnp.asarray(cc.dram_read, F32)] + \
+        [jnp.asarray(cc.cxl_read, F32)] * (mc.n_tiers - 2) + \
+        [jnp.asarray(cc.nvmm_read, F32)]
+    return jnp.stack(vals)
+
+
+def tier_write_lat(cc: CostConfig, mc: MachineConfig) -> jax.Array:
+    vals = [jnp.asarray(cc.dram_write, F32)] + \
+        [jnp.asarray(cc.cxl_write, F32)] * (mc.n_tiers - 2) + \
+        [jnp.asarray(cc.nvmm_write, F32)]
+    return jnp.stack(vals)
+
+
+def _read_lat(cc: CostConfig, mc: MachineConfig, node: jax.Array) -> jax.Array:
+    return jnp.take(tier_read_lat(cc, mc), jnp.take(tier_ext(mc), node + 1))
+
+
+def _write_lat(cc: CostConfig, mc: MachineConfig, node: jax.Array) -> jax.Array:
+    return jnp.take(tier_write_lat(cc, mc), jnp.take(tier_ext(mc), node + 1))
 
 
 def _split_two(n: jax.Array, cap_a: jax.Array, cap_b: jax.Array
@@ -66,25 +89,53 @@ def _rank_key(count: jax.Array, idx_bits: int) -> jax.Array:
 
 
 def autonuma_scan(st: SimState, mc: MachineConfig, cc: CostConfig,
-                  pc: PolicyConfig, wm: jax.Array,
-                  budget: int) -> Tuple[SimState, jax.Array]:
-    """One AutoNUMA scan + (optionally) Algorithm-1 triggers.
+                  pc: PolicyConfig, wm: jax.Array, budget: int,
+                  va_row: jax.Array, w_row: jax.Array
+                  ) -> Tuple[SimState, jax.Array]:
+    """One balancing scan + (optionally) Algorithm-1 triggers.
+
+    Runs whichever migration family ``pc.mig_policy`` selects — AutoNUMA
+    (the classic promote/exchange scan), TPP (active/inactive split with
+    headroom demotion to the next-slower tier) or Nomad (transactional
+    promotion with non-exclusive shadow copies) — all through one masked
+    dataflow so a vmap sweep can mix families per lane.
 
     Returns the new state and the total migration cycles of this scan (the
     caller spreads them over threads: the migration daemon steals CPU time).
 
     ``budget`` is the static upper bound on candidates (it shapes the
     ``top_k`` calls); the PolicyConfig knobs — ``autonuma`` on/off,
-    ``autonuma_budget``, threshold, exchange, ``mig`` — may all be traced
-    scalars (a vmap policy sweep), so they gate through masks: a disabled
-    lane's scan is a bit-exact no-op rather than a skipped branch.
+    ``autonuma_budget``, threshold, exchange, ``mig``, ``mig_policy`` —
+    may all be traced scalars (a vmap policy sweep), so they gate through
+    masks: a disabled lane's scan is a bit-exact no-op rather than a
+    skipped branch.  ``va_row``/``w_row`` are the current step's access row
+    (Nomad's concurrent-write abort condition).
     """
     n_map = st.data_node.shape[0]
+    n_nodes = st.node_free.shape[0]
     B = min(int(budget), n_map)
     idx_bits = max(n_map - 1, 1).bit_length()
     enabled = jnp.asarray(pc.autonuma) & ~st.oom_killed
     budget_t = jnp.minimum(jnp.asarray(pc.autonuma_budget, I32), n_map)
+    en_tpp = jnp.asarray(pc.mig_policy) == MIG_TPP
+    en_nomad = jnp.asarray(pc.mig_policy) == MIG_NOMAD
 
+    # ---- Nomad shadow invalidation ----------------------------------------
+    # A write since the last scan dirties the primary copy; its shadow (if
+    # any) is stale and is dropped, freeing the shadow's page.  Surviving
+    # shadows are clean and eligible to serve a demotion for free.
+    shadow = st.shadow_node
+    written = st.written_recent
+    drop = enabled & en_nomad & (shadow >= 0) & (written > 0)
+    free0 = st.node_free + (jnp.zeros((n_nodes,), I32)
+                            .at[jnp.clip(shadow, 0, n_nodes - 1)]
+                            .add(drop.astype(I32)))
+    shadow = jnp.where(drop, -1, shadow)
+    n_drops = jnp.sum(drop.astype(I32))
+
+    # ---- hot candidates (promotion) ---------------------------------------
+    # "Hot"/"active" is the same recent-access test in every family (TPP's
+    # active list == pages at/above the NUMA-hint threshold).
     on_nvmm = (st.data_node >= 2)
     hot_count = jnp.where(on_nvmm & (st.access_recent >= pc.autonuma_threshold),
                           st.access_recent, 0)
@@ -93,24 +144,49 @@ def autonuma_scan(st: SimState, mc: MachineConfig, cc: CostConfig,
     hot_valid = jnp.take(hot_key, hot_pages) > 0
     n_hot = jnp.minimum(jnp.sum(hot_valid.astype(I32)), budget_t)
 
-    # Cold DRAM victims (exchange mode only).
+    # Cold DRAM victims.  TPP demotes only *inactive* pages (below the
+    # activity threshold); AutoNUMA exchange considers every DRAM page,
+    # coldest first.
     on_dram = is_dram(st.data_node)
-    cold_score = jnp.where(on_dram, 255 - jnp.clip(st.access_recent, 0, 255), 0)
-    cold_key = jnp.where(on_dram, _rank_key(cold_score, idx_bits), -1)
+    elig = on_dram & jnp.where(en_tpp,
+                               st.access_recent < pc.autonuma_threshold, True)
+    cold_score = jnp.where(elig, 255 - jnp.clip(st.access_recent, 0, 255), 0)
+    cold_key = jnp.where(elig, _rank_key(cold_score, idx_bits), -1)
     _, cold_pages = jax.lax.top_k(cold_key, B)
     cold_valid = jnp.take(cold_key, cold_pages) >= 0
 
-    excess0 = jnp.maximum(st.node_free[0] - wm[0], 0)
-    excess1 = jnp.maximum(st.node_free[1] - wm[1], 0)
+    excess0 = jnp.maximum(free0[0] - wm[0], 0)
+    excess1 = jnp.maximum(free0[1] - wm[1], 0)
     dram_excess = excess0 + excess1
 
     n_promote_want = jnp.minimum(n_hot, budget_t)
     need_demote = jnp.maximum(n_promote_want - dram_excess, 0)
     n_victims = jnp.minimum(jnp.sum(cold_valid.astype(I32)), budget_t)
-    nvmm_room = jnp.maximum(st.node_free[2], 0) + jnp.maximum(st.node_free[3], 0)
-    n_demote = jnp.where(enabled & jnp.asarray(pc.autonuma_exchange),
-                         jnp.minimum(jnp.minimum(need_demote, n_victims),
-                                     nvmm_room), 0)
+
+    # TPP demotes ahead of reclaim pressure: keep the low watermark plus a
+    # configurable headroom fraction of tier-0 capacity free, independent
+    # of promotion demand.
+    cap0 = 2 * mc.tier_capacities[0]
+    tpp_extra = (jnp.asarray(pc.tpp_demote_wm, F32) * cap0).astype(I32)
+    need_tpp = jnp.maximum(wm[0] + wm[1] + tpp_extra - (free0[0] + free0[1]),
+                           0)
+    need_eff = jnp.where(en_tpp, jnp.maximum(need_tpp, need_demote),
+                         need_demote)
+
+    # Demotion destination tier: TPP steps to the *next-slower* non-empty
+    # tier; AutoNUMA/Nomad demote straight to the slowest (the classic
+    # NVMM pair).  Both node pairs are static; the pick is a traced select.
+    caps = mc.tier_capacities
+    tpp_t = next(t for t in range(1, mc.n_tiers) if caps[t] > 0)
+    dest_a = jnp.where(en_tpp, 2 * tpp_t, 2 * (mc.n_tiers - 1)).astype(I32)
+    dest_b = dest_a + 1
+    cap_a = jnp.take(free0, dest_a)
+    cap_b = jnp.take(free0, dest_b)
+    room = jnp.maximum(cap_a, 0) + jnp.maximum(cap_b, 0)
+    dem_en = jnp.where(en_tpp, True, jnp.asarray(pc.autonuma_exchange))
+    n_demote = jnp.where(enabled & dem_en,
+                         jnp.minimum(jnp.minimum(need_eff, n_victims),
+                                     room), 0)
     n_promote = jnp.where(enabled,
                           jnp.minimum(n_promote_want, dram_excess + n_demote),
                           0)
@@ -119,63 +195,101 @@ def autonuma_scan(st: SimState, mc: MachineConfig, cc: CostConfig,
     k = jnp.arange(B, dtype=I32)
     dem_mask = k < n_demote
     dem_pages = cold_pages
-    share2 = _split_two(n_demote, st.node_free[2], st.node_free[3])
-    dem_dest = jnp.where(k < share2, 2, 3).astype(I32)
+    share_a = _split_two(n_demote, cap_a, cap_b)
+    dem_dest = jnp.where(k < share_a, dest_a, dest_b).astype(I32)
     dem_src = jnp.take(st.data_node, dem_pages)
 
+    # Nomad flip: a demoted page whose (clean) shadow survived skips the
+    # copy — the stale-free shadow *becomes* the page, so the destination
+    # node gains no new occupancy and the shadow slot is consumed.
+    shadow_at_dem = jnp.take(shadow, dem_pages)
+    flip = dem_mask & en_nomad & (shadow_at_dem >= 0)
+    dem_dest_eff = jnp.where(flip, shadow_at_dem, dem_dest)
+
     data_node = st.data_node.at[dem_pages].set(
-        jnp.where(dem_mask, dem_dest, jnp.take(st.data_node, dem_pages)))
-    free_delta = (jnp.zeros((4,), I32)
-                  .at[jnp.clip(dem_src, 0, 3)].add(dem_mask.astype(I32))
-                  .at[dem_dest].add(-dem_mask.astype(I32)))
+        jnp.where(dem_mask, dem_dest_eff, jnp.take(st.data_node, dem_pages)))
+    free_delta = (jnp.zeros((n_nodes,), I32)
+                  .at[jnp.clip(dem_src, 0, n_nodes - 1)]
+                  .add(dem_mask.astype(I32))
+                  .at[jnp.clip(dem_dest_eff, 0, n_nodes - 1)]
+                  .add(-(dem_mask & ~flip).astype(I32)))
+    shadow = shadow.at[dem_pages].set(
+        jnp.where(flip, -1, shadow_at_dem))
     ldc = st.leaf_dram_children.at[dem_pages >> mc.radix_bits].add(
         jnp.where(dem_mask, -1, 0))
 
     # ---- apply promotions ----------------------------------------------------
     pro_mask = (k < n_promote) & hot_valid
     pro_pages = hot_pages
-    excess0b = jnp.maximum(st.node_free[0] + free_delta[0] - wm[0], 0)
-    excess1b = jnp.maximum(st.node_free[1] + free_delta[1] - wm[1], 0)
+    excess0b = jnp.maximum(free0[0] + free_delta[0] - wm[0], 0)
+    excess1b = jnp.maximum(free0[1] + free_delta[1] - wm[1], 0)
     share0 = _split_two(n_promote, excess0b, excess1b)
     pro_dest = jnp.where(k < share0, 0, 1).astype(I32)
     pro_src = jnp.take(data_node, pro_pages)
 
-    data_node = data_node.at[pro_pages].set(
-        jnp.where(pro_mask, pro_dest, jnp.take(data_node, pro_pages)))
-    free_delta = (free_delta
-                  .at[jnp.clip(pro_src, 0, 3)].add(pro_mask.astype(I32))
-                  .at[pro_dest].add(-pro_mask.astype(I32)))
-    ldc = ldc.at[pro_pages >> mc.radix_bits].add(jnp.where(pro_mask, 1, 0))
+    # Nomad transactional abort: a page written *this step* (while the copy
+    # is in flight) fails its promotion and retries at a later scan.
+    m_row = jnp.clip(va_row >> mc.map_shift, 0, n_map - 1)
+    conc_w = jnp.zeros((n_map,), jnp.bool_).at[
+        jnp.where((va_row >= 0) & w_row, m_row, n_map)].set(True, mode="drop")
+    abort = pro_mask & en_nomad & jnp.take(conc_w, pro_pages)
+    commit = pro_mask & ~abort
+    # Committed Nomad promotions keep the source copy as a clean shadow
+    # (non-exclusive tiering): the source page is NOT freed.
+    keep_shadow = commit & en_nomad
 
-    n_data_migs = jnp.sum(dem_mask.astype(I32)) + jnp.sum(pro_mask.astype(I32))
-    mig_cost = jnp.sum(jnp.where(dem_mask, cc.migrate_fixed + cc.tlb_flush +
-                                 cc.copy_lines * (_read_lat(cc, dem_src) +
-                                                  _write_lat(cc, dem_dest)), 0.0))
-    mig_cost += jnp.sum(jnp.where(pro_mask, cc.migrate_fixed + cc.tlb_flush +
-                                  cc.copy_lines * (_read_lat(cc, pro_src) +
-                                                   _write_lat(cc, pro_dest)), 0.0))
+    data_node = data_node.at[pro_pages].set(
+        jnp.where(commit, pro_dest, jnp.take(data_node, pro_pages)))
+    free_delta = (free_delta
+                  .at[jnp.clip(pro_src, 0, n_nodes - 1)]
+                  .add((commit & ~keep_shadow).astype(I32))
+                  .at[pro_dest].add(-commit.astype(I32)))
+    shadow = shadow.at[jnp.where(keep_shadow, pro_pages, n_map)].set(
+        pro_src, mode="drop")
+    ldc = ldc.at[pro_pages >> mc.radix_bits].add(jnp.where(commit, 1, 0))
+
+    n_data_migs = jnp.sum(dem_mask.astype(I32)) + jnp.sum(commit.astype(I32))
+    mig_cost = jnp.sum(jnp.where(
+        dem_mask, cc.migrate_fixed + cc.tlb_flush +
+        jnp.where(flip, jnp.asarray(0.0, F32),
+                  cc.copy_lines * (_read_lat(cc, mc, dem_src) +
+                                   _write_lat(cc, mc, dem_dest_eff))), 0.0))
+    mig_cost += jnp.sum(jnp.where(
+        commit, cc.migrate_fixed + cc.tlb_flush +
+        cc.copy_lines * (_read_lat(cc, mc, pro_src) +
+                         _write_lat(cc, mc, pro_dest)), 0.0))
+    # An aborted transactional copy still paid the read half + bookkeeping.
+    mig_cost += jnp.sum(jnp.where(
+        abort, cc.migrate_fixed + cc.copy_lines * _read_lat(cc, mc, pro_src),
+        0.0))
 
     # TLB shootdown for migrated data pages (non-migrated entries are routed
     # out of range and dropped to avoid duplicate-scatter hazards).
     map_flushed = jnp.zeros((n_map,), jnp.bool_)
     map_flushed = map_flushed.at[jnp.where(dem_mask, dem_pages, n_map)].set(
         True, mode="drop")
-    map_flushed = map_flushed.at[jnp.where(pro_mask, pro_pages, n_map)].set(
+    map_flushed = map_flushed.at[jnp.where(commit, pro_pages, n_map)].set(
         True, mode="drop")
     l1_tlb = tlbs.invalidate_matching(st.l1_tlb, map_flushed, 0)
     stlb = tlbs.invalidate_matching(st.stlb, map_flushed, 0)
 
     counters = st.counters
-    counters = dataclasses_replace(counters,
-                                   data_migrations=counters.data_migrations + n_data_migs,
-                                   demotions=counters.demotions +
-                                   jnp.sum(dem_mask.astype(I32)))
+    counters = dataclasses_replace(
+        counters,
+        data_migrations=counters.data_migrations + n_data_migs,
+        demotions=counters.demotions + jnp.sum(dem_mask.astype(I32)),
+        nomad_retries=counters.nomad_retries + jnp.sum(abort.astype(I32)),
+        nomad_flip_demotions=counters.nomad_flip_demotions +
+        jnp.sum(flip.astype(I32)),
+        nomad_shadow_drops=counters.nomad_shadow_drops + n_drops)
 
     st = dataclasses_replace(
         st, data_node=data_node, leaf_dram_children=ldc,
-        node_free=st.node_free + free_delta, l1_tlb=l1_tlb, stlb=stlb,
-        counters=counters,
-        # hotness decay after the scan (disabled lanes keep their counts)
+        node_free=free0 + free_delta, shadow_node=shadow,
+        l1_tlb=l1_tlb, stlb=stlb, counters=counters,
+        # Nomad's write-tracking window resets at its scan tick; hotness
+        # decay after the scan (disabled lanes keep their counts).
+        written_recent=jnp.where(enabled & en_nomad, 0, written),
         access_recent=jnp.where(enabled, st.access_recent // 2,
                                 st.access_recent))
 
@@ -183,8 +297,8 @@ def autonuma_scan(st: SimState, mc: MachineConfig, cc: CostConfig,
     # Masking the trigger batch with the (possibly traced) ``mig`` flag makes
     # the whole Algorithm-1 pass a no-op for non-Mig lanes of a sweep.
     trig_pages = jnp.concatenate([dem_pages, pro_pages])
-    trig_dest = jnp.concatenate([dem_dest, pro_dest])
-    trig_mask = jnp.concatenate([dem_mask, pro_mask]) & jnp.asarray(pc.mig)
+    trig_dest = jnp.concatenate([dem_dest_eff, pro_dest])
+    trig_mask = jnp.concatenate([dem_mask, commit]) & jnp.asarray(pc.mig)
     st, l4_cost = migrate_leaf_batch(st, mc, cc, trig_pages, trig_dest,
                                      trig_mask)
     mig_cost = mig_cost + l4_cost
@@ -212,11 +326,14 @@ def migrate_leaf_batch(st: SimState, mc: MachineConfig, cc: CostConfig,
                                     sorted_leaf[1:] != sorted_leaf[:-1]])
     is_first = jnp.zeros((K,), jnp.bool_).at[sort_idx].set(first_sorted) & mask
 
+    text = tier_ext(mc)
+    tier_of = lambda n: jnp.take(text, n + 1)   # noqa: E731
     l4_node = jnp.take(st.leaf_node, leaf)
     already_dest = l4_node == dest
-    in_same_tier = same_tier(l4_node, dest) & ~already_dest
+    in_same_tier = (tier_of(l4_node) == tier_of(dest)) & ~already_dest
     children_dram = jnp.take(st.leaf_dram_children, leaf)
-    sibling_guard = (~is_dram(dest)) & (children_dram > 0)
+    dest_slower = tier_of(dest) > 0            # == ~is_dram(dest) for 2 tiers
+    sibling_guard = dest_slower & (children_dram > 0)
 
     want = is_first & (l4_node >= 0) & ~already_dest & ~in_same_tier & ~sibling_guard
 
@@ -230,7 +347,8 @@ def migrate_leaf_batch(st: SimState, mc: MachineConfig, cc: CostConfig,
     lock_skip = want & ~lock_ok
 
     # Destination must have a free page (alloc_pages_node on dest).
-    dest_free = jnp.take(st.node_free, jnp.clip(dest, 0, 3))
+    n_nodes = st.node_free.shape[0]
+    dest_free = jnp.take(st.node_free, jnp.clip(dest, 0, n_nodes - 1))
     can_alloc = dest_free > 0          # approximation: per-batch headroom
     winner = lock_ok & can_alloc
     alloc_fail = lock_ok & ~can_alloc
@@ -240,14 +358,14 @@ def migrate_leaf_batch(st: SimState, mc: MachineConfig, cc: CostConfig,
     # duplicate leaf ids cannot revert a winner's write
     leaf_node = st.leaf_node.at[jnp.where(winner, leaf, n_leaf)].set(
         dest, mode="drop")
-    free_delta = (jnp.zeros((4,), I32)
-                  .at[jnp.clip(src, 0, 3)].add(winner.astype(I32))
-                  .at[jnp.clip(dest, 0, 3)].add(-winner.astype(I32)))
+    free_delta = (jnp.zeros((n_nodes,), I32)
+                  .at[jnp.clip(src, 0, n_nodes - 1)].add(winner.astype(I32))
+                  .at[jnp.clip(dest, 0, n_nodes - 1)].add(-winner.astype(I32)))
 
     cost = jnp.sum(jnp.where(winner,
                              cc.migrate_fixed + cc.tlb_flush + cc.alloc_fast +
-                             cc.copy_lines * (_read_lat(cc, src) +
-                                              _write_lat(cc, dest)), 0.0))
+                             cc.copy_lines * (_read_lat(cc, mc, src) +
+                                              _write_lat(cc, mc, dest)), 0.0))
 
     # Shoot down translations covered by migrated leaf pages.  Winners are
     # unique per leaf, so routing non-winners out of range avoids duplicate
@@ -268,8 +386,8 @@ def migrate_leaf_batch(st: SimState, mc: MachineConfig, cc: CostConfig,
     others = mask & ~is_first & (leaf >= 0)
     new_l4 = jnp.take(leaf_node, leaf)
     o_already = others & (new_l4 == dest)
-    o_tier = others & ~o_already & same_tier(new_l4, dest)
-    o_sibling = others & ~o_already & ~o_tier & (~is_dram(dest)) & (children_dram > 0)
+    o_tier = others & ~o_already & (tier_of(new_l4) == tier_of(dest))
+    o_sibling = others & ~o_already & ~o_tier & dest_slower & (children_dram > 0)
 
     c = st.counters
     c = dataclasses_replace(

@@ -30,7 +30,8 @@ from __future__ import annotations
 import numpy as np
 
 from .config import (CostConfig, MachineConfig, PolicyConfig, INTERLEAVE,
-                     PT_BIND_ALL, PT_BIND_HIGH, PT_FOLLOW_DATA)
+                     MIG_NOMAD, MIG_TPP, PT_BIND_ALL, PT_BIND_HIGH,
+                     PT_FOLLOW_DATA)
 from .sim import (SCHED_DO, SCHED_WINNER, Trace, fault_schedule)
 
 _MIX = (0x9E3779B1, 0x85EBCA77, 0xC2B2AE3D, 0x27D4EB2F)
@@ -84,6 +85,12 @@ class OracleSim:
         self.n_mid = mc.n_mid_pages
         self.n_top = mc.n_top_pages
         self.thp = mc.page_order > 0
+        self.nt = mc.n_tiers
+        self.tier_of = mc.tier_of_node
+        self.rd_vals = [cc.dram_read] + [cc.cxl_read] * (self.nt - 2) \
+            + [cc.nvmm_read]
+        self.wr_vals = [cc.dram_write] + [cc.cxl_write] * (self.nt - 2) \
+            + [cc.nvmm_write]
 
         self.data_node = np.full(self.n_map, -1, np.int64)
         self.leaf_node = np.full(self.n_leaf, -1, np.int64)
@@ -101,6 +108,8 @@ class OracleSim:
         self.oom = False
         self.oom_step = -1
         self.access = np.zeros(self.n_map, np.int64)
+        self.shadow = np.full(self.n_map, -1, np.int64)
+        self.written = np.zeros(self.n_map, np.int64)
 
         self.l1 = [_Tlb(mc.l1_tlb_sets, mc.l1_tlb_ways) for _ in range(T)]
         self.stlb = [_Tlb(mc.stlb_sets, mc.stlb_ways) for _ in range(T)]
@@ -117,22 +126,26 @@ class OracleSim:
                         faults=0, slow_allocs=0, data_migrations=0,
                         demotions=0, l4_mig_success=0, l4_mig_already_dest=0,
                         l4_mig_in_dram=0, l4_mig_sibling_guard=0,
-                        l4_mig_lock_skip=0, oom_kills=0)
-        self.data_allocs = np.zeros(4, np.int64)
-        self.pt_allocs = np.zeros(4, np.int64)
+                        l4_mig_lock_skip=0, oom_kills=0, nomad_retries=0,
+                        nomad_flip_demotions=0, nomad_shadow_drops=0)
+        self.data_allocs = np.zeros(len(cap), np.int64)
+        self.pt_allocs = np.zeros(len(cap), np.int64)
         self.step = 0
 
     # ---------------- helpers -------------------------------------------------
     def _is_dram(self, n):
         return 0 <= n < 2
 
+    def _tier(self, n):
+        """Tier of a node; node -1 (unallocated) maps to the slowest tier,
+        mirroring ``migrate.tier_ext``'s node+1 indexing."""
+        return self.nt - 1 if n < 0 else int(self.tier_of[n])
+
     def _rd(self, n):
-        return np.float32(self.cc.dram_read if self._is_dram(n)
-                          else self.cc.nvmm_read)
+        return np.float32(self.rd_vals[self._tier(n)])
 
     def _wr_(self, n):
-        return np.float32(self.cc.dram_write if self._is_dram(n)
-                          else self.cc.nvmm_write)
+        return np.float32(self.wr_vals[self._tier(n)])
 
     def _alloc_one(self, prefs, ignore_wm):
         """Mirror of alloc.alloc_one."""
@@ -160,14 +173,22 @@ class OracleSim:
 
     def _data_prefs(self, t):
         if self.pc.data_policy == INTERLEAVE:
-            s = self.interleave_ptr % 4
-            return [(s + i) % 4 for i in range(4)]
+            # round-robin over the *allocatable* nodes only (zero-capacity
+            # middle tiers never perturb the rotation)
+            alloc = self.mc.alloc_nodes
+            a = len(alloc)
+            s = self.interleave_ptr % a
+            return [alloc[(s + i) % a] for i in range(a)]
+        # local then remote node of each tier, fastest tier first
         local = 0 if t < self.mc.n_threads // 2 else 1
-        return [local, 1 - local, local + 2, 3 - local]
+        prefs = []
+        for tt in range(self.nt):
+            prefs += [2 * tt + local, 2 * tt + (1 - local)]
+        return prefs
 
     def _dram_prefs(self, t):
         local = 0 if t < self.mc.n_threads // 2 else 1
-        return [local, 1 - local, -1, -1]
+        return [local, 1 - local]
 
     def _alloc_pt(self, t, arr, idx, is_upper):
         """Mirror of sim._alloc_pt_level; returns cycles charged."""
@@ -200,37 +221,76 @@ class OracleSim:
         cost += np.float32(self.cc.alloc_slow if slow else self.cc.alloc_fast)
         return cost
 
-    # ---------------- AutoNUMA + Algorithm 1 ---------------------------------
-    def _autonuma(self):
+    # ---------------- AutoNUMA / TPP / Nomad + Algorithm 1 -------------------
+    def _autonuma(self, va_row, w_row):
+        """One balancing scan, mirroring ``migrate.autonuma_scan`` exactly.
+
+        ``va_row``/``w_row`` are the current step's access row — Nomad's
+        concurrent-write abort condition (unused by the other families).
+        """
         mc, cc, pc = self.mc, self.cc, self.pc
-        B = pc.autonuma_budget
+        nt = self.nt
+        bt = min(int(pc.autonuma_budget), self.n_map)
         idx_bits = max(self.n_map - 1, 1).bit_length()
         nn = 1 << idx_bits
+        en_tpp = int(pc.mig_policy) == MIG_TPP
+        en_nomad = int(pc.mig_policy) == MIG_NOMAD
 
         def rank_key(count, i):
             return (min(max(count, 0), 255) << idx_bits) | (nn - 1 - i)
 
+        # (0) Nomad shadow invalidation: a write since the last scan made
+        # the shadow stale; drop it and free its page.
+        if en_nomad:
+            for i in range(self.n_map):
+                if self.shadow[i] >= 0 and self.written[i] > 0:
+                    self.free[self.shadow[i]] += 1
+                    self.shadow[i] = -1
+                    self.cnt["nomad_shadow_drops"] += 1
+
+        # (1) hot candidates: same recent-access test in every family
         hot = [(rank_key(self.access[i], i), i) for i in range(self.n_map)
                if self.data_node[i] >= 2
                and self.access[i] >= pc.autonuma_threshold
                and self.access[i] > 0]
         hot.sort(key=lambda kv: -kv[0])
-        hot_pages = [i for _, i in hot[:B]]
-        n_hot = len(hot_pages)
+        hot_pages = [i for _, i in hot]
+        n_hot = min(len(hot_pages), bt)
 
+        # (2) cold tier-0 victims; TPP narrows to the *inactive* list
         cold = [(rank_key(255 - min(self.access[i], 255), i), i)
-                for i in range(self.n_map) if self._is_dram(self.data_node[i])]
+                for i in range(self.n_map)
+                if self._is_dram(self.data_node[i])
+                and (not en_tpp or self.access[i] < pc.autonuma_threshold)]
         cold.sort(key=lambda kv: -kv[0])
-        cold_pages = [i for _, i in cold[:B]]
+        cold_pages = [i for _, i in cold]
+        n_victims = min(len(cold_pages), bt)
 
         excess0 = max(self.free[0] - self.wm[0], 0)
         excess1 = max(self.free[1] - self.wm[1], 0)
         dram_excess = excess0 + excess1
-        n_promote_want = min(n_hot, B)
+        n_promote_want = min(n_hot, bt)
         need_demote = max(n_promote_want - dram_excess, 0)
-        nvmm_room = max(self.free[2], 0) + max(self.free[3], 0)
-        n_demote = min(need_demote, len(cold_pages), nvmm_room) \
-            if pc.autonuma_exchange else 0
+
+        # TPP demotes ahead of reclaim pressure: watermark + headroom
+        # fraction of tier-0 capacity, independent of promotion demand.
+        cap0 = 2 * mc.tier_capacities[0]
+        tpp_extra = int(np.float32(np.float32(pc.tpp_demote_wm) * cap0))
+        need_tpp = max(int(self.wm[0]) + int(self.wm[1]) + tpp_extra
+                       - (int(self.free[0]) + int(self.free[1])), 0)
+        need_eff = max(need_tpp, need_demote) if en_tpp else need_demote
+
+        # demotion destination pair: TPP -> next-slower non-empty tier,
+        # AutoNUMA/Nomad -> slowest tier
+        caps = mc.tier_capacities
+        tpp_t = next(t for t in range(1, nt) if caps[t] > 0)
+        dest_a = 2 * tpp_t if en_tpp else 2 * (nt - 1)
+        dest_b = dest_a + 1
+        cap_a = int(self.free[dest_a])
+        cap_b = int(self.free[dest_b])
+        room = max(cap_a, 0) + max(cap_b, 0)
+        dem_en = True if en_tpp else bool(pc.autonuma_exchange)
+        n_demote = min(min(need_eff, n_victims), room) if dem_en else 0
         n_promote = min(n_promote_want, dram_excess + n_demote)
 
         def split_two(n, ca, cb):
@@ -242,31 +302,59 @@ class OracleSim:
         triggers = []     # (page, dest) in batch order
         migrated = []
 
-        share2 = split_two(n_demote, self.free[2], self.free[3])
+        share_a = split_two(n_demote, cap_a, cap_b)
         for k in range(n_demote):
             page = cold_pages[k]
-            dest = 2 if k < share2 else 3
+            dest = dest_a if k < share_a else dest_b
             src = self.data_node[page]
-            self.data_node[page] = dest
+            # Nomad flip: a surviving (clean) shadow *becomes* the page —
+            # no copy, no new occupancy on the destination.
+            flip = en_nomad and self.shadow[page] >= 0
+            dest_eff = int(self.shadow[page]) if flip else dest
+            self.data_node[page] = dest_eff
             self.free[src] += 1
-            self.free[dest] -= 1
+            if flip:
+                self.shadow[page] = -1
+                self.cnt["nomad_flip_demotions"] += 1
+            else:
+                self.free[dest_eff] -= 1
             self.ldc[page >> self.rb] -= 1
-            cost += np.float32(cc.migrate_fixed + cc.tlb_flush) + \
-                np.float32(cc.copy_lines) * (self._rd(src) + self._wr_(dest))
+            add = np.float32(cc.migrate_fixed + cc.tlb_flush)
+            if not flip:
+                add = add + np.float32(cc.copy_lines) * \
+                    (self._rd(src) + self._wr_(dest_eff))
+            cost += add
             self.cnt["demotions"] += 1
             self.cnt["data_migrations"] += 1
-            triggers.append((page, dest))
+            triggers.append((page, dest_eff))
             migrated.append(page)
+
+        # granules written *this step* (Nomad's transactional-abort set)
+        conc_w = set()
+        for t in range(mc.n_threads):
+            va = int(va_row[t])
+            if va >= 0 and bool(w_row[t]):
+                conc_w.add(min(va >> mc.map_shift, self.n_map - 1))
 
         excess0b = max(self.free[0] - self.wm[0], 0)
         excess1b = max(self.free[1] - self.wm[1], 0)
         share0 = split_two(n_promote, excess0b, excess1b)
         for k in range(n_promote):
             page = hot_pages[k]
-            dest = 0 if k < share0 else 1
             src = self.data_node[page]
+            if en_nomad and page in conc_w:
+                # transactional abort: the copy's read half + bookkeeping
+                # were already paid; the page retries at a later scan
+                cost += np.float32(cc.migrate_fixed) + \
+                    np.float32(cc.copy_lines) * self._rd(src)
+                self.cnt["nomad_retries"] += 1
+                continue
+            dest = 0 if k < share0 else 1
             self.data_node[page] = dest
-            self.free[src] += 1
+            if en_nomad:
+                self.shadow[page] = src   # non-exclusive: keep clean shadow
+            else:
+                self.free[src] += 1
             self.free[dest] -= 1
             self.ldc[page >> self.rb] += 1
             cost += np.float32(cc.migrate_fixed + cc.tlb_flush) + \
@@ -279,6 +367,8 @@ class OracleSim:
         for tlb_list in (self.l1, self.stlb):
             for tlb in tlb_list:
                 tlb.invalidate_where(lambda tag: tag in mig_set)
+        if en_nomad:
+            self.written[:] = 0
         self.access //= 2
 
         if pc.mig and triggers:
@@ -309,10 +399,10 @@ class OracleSim:
             if l4n == dest:
                 self.cnt["l4_mig_already_dest"] += 1
                 continue
-            if self._is_dram(l4n) == self._is_dram(dest):
+            if self._tier(l4n) == self._tier(dest):
                 self.cnt["l4_mig_in_dram"] += 1
                 continue
-            if not self._is_dram(dest) and self.ldc[leaf] > 0:
+            if self._tier(dest) > 0 and self.ldc[leaf] > 0:
                 self.cnt["l4_mig_sibling_guard"] += 1
                 continue
             wants.append(pos)
@@ -352,9 +442,9 @@ class OracleSim:
             new_l4 = self.leaf_node[leaf]
             if new_l4 == dest:
                 self.cnt["l4_mig_already_dest"] += 1
-            elif self._is_dram(new_l4) == self._is_dram(dest):
+            elif self._tier(new_l4) == self._tier(dest):
                 self.cnt["l4_mig_in_dram"] += 1
-            elif not self._is_dram(dest) and self.ldc[leaf] > 0:
+            elif self._tier(dest) > 0 and self.ldc[leaf] > 0:
                 self.cnt["l4_mig_sibling_guard"] += 1
 
         for tlb_list in (self.l1, self.stlb):
@@ -386,15 +476,16 @@ class OracleSim:
             fid = int(trace.free_seg[s])
             if fid >= 0:
                 self._free_segment(fid, seg_of_map, seg_of_leaf)
-            if pc.autonuma and self.step > 0 \
-                    and self.step % pc.autonuma_period == 0 and not self.oom:
-                c = self._autonuma()
-                self.cy_total += c * np.float32(cc.mig_cost_scale) / np.float32(T)
-                self.cy_mig += c
 
             va_row = trace.va[s]
             w_row = trace.is_write[s]
             llc_rate = float(trace.llc[s])
+
+            if pc.autonuma and self.step > 0 \
+                    and self.step % pc.autonuma_period == 0 and not self.oom:
+                c = self._autonuma(va_row, w_row)
+                self.cy_total += c * np.float32(cc.mig_cost_scale) / np.float32(T)
+                self.cy_mig += c
 
             # ---- phase A ------------------------------------------------
             fault_mask = np.zeros(T, bool)
@@ -421,7 +512,7 @@ class OracleSim:
                     (self.data_node[m] < 0) == bool(sched[s, t]
                                                     & SCHED_WINNER), \
                     f"step {s} thread {t}: WINNER bit diverges from oracle"
-                self._fault(t, m)
+                self._fault(t, m, bool(w_row[t]))
             self.step += 1
 
     def _mapped_access(self, t, m, is_write, llc_rate):
@@ -478,12 +569,14 @@ class OracleSim:
             self.pde[t].update(leaf_id, pde_way, now)
             self.pdpte[t].update(mid_id, pdpte_way, now)
         self.access[m] += 1
+        if is_write:
+            self.written[m] += 1
         self.cy_total[t] += total
         self.cy_walk[t] += walk_cost
         self.cy_stall[t] += stall
         self.cy_data[t] += data_cost
 
-    def _fault(self, t, m):
+    def _fault(self, t, m, is_write=False):
         cc = self.cc
         now = self.step
         if self.data_node[m] >= 0:      # raced with an earlier thread
@@ -529,6 +622,8 @@ class OracleSim:
         _, w4 = self.pdpte[t].lookup(m >> (2 * self.rb))
         self.pdpte[t].update(m >> (2 * self.rb), w4, now)
         self.access[m] += 1
+        if is_write:
+            self.written[m] += 1
         self.cy_total[t] += cost
         self.cy_fault[t] += cost
 
@@ -541,6 +636,11 @@ class OracleSim:
                     self.ldc[i >> self.rb] = max(self.ldc[i >> self.rb] - 1, 0)
                 self.data_node[i] = -1
                 self.access[i] = 0
+                self.written[i] = 0
+            if seg_of_map[i] == fid and self.shadow[i] >= 0:
+                # Nomad shadows of freed granules go with the segment
+                self.free[self.shadow[i]] += 1
+                self.shadow[i] = -1
         freed_leaves = set()
         for l in range(self.n_leaf):
             if seg_of_leaf[l] == fid and self.leaf_node[l] >= 0:
@@ -571,5 +671,14 @@ class OracleSim:
             leaf_pages_dram=int(np.sum((self.leaf_node >= 0)
                                        & (self.leaf_node < 2))),
             leaf_pages_nvmm=int(np.sum(self.leaf_node >= 2)),
+            data_pages_per_tier=[
+                int(np.sum((self.data_node >= 2 * t)
+                           & (self.data_node < 2 * t + 2)))
+                for t in range(self.nt)],
+            leaf_pages_per_tier=[
+                int(np.sum((self.leaf_node >= 2 * t)
+                           & (self.leaf_node < 2 * t + 2)))
+                for t in range(self.nt)],
+            shadow_pages=int(np.sum(self.shadow >= 0)),
         )
         return out

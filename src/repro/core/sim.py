@@ -364,6 +364,20 @@ class RunResult:
             "leaf_pages_nvmm": int(np.sum(alive & (leaf_nodes >= 2))),
             "data_pages_dram": int(np.sum((data >= 0) & (data < 2))),
             "data_pages_nvmm": int(np.sum(data >= 2)),
+            # N-tier / policy-family extensions (tier t owns nodes 2t,
+            # 2t+1; on the 2-tier machine the per-tier lists reduce to the
+            # dram/nvmm pairs above).
+            "data_pages_per_tier": [
+                int(np.sum((data >= 2 * t) & (data < 2 * t + 2)))
+                for t in range(np.asarray(st.node_free).shape[0] // 2)],
+            "leaf_pages_per_tier": [
+                int(np.sum(alive & (leaf_nodes >= 2 * t)
+                           & (leaf_nodes < 2 * t + 2)))
+                for t in range(np.asarray(st.node_free).shape[0] // 2)],
+            "shadow_pages": int(np.sum(np.asarray(st.shadow_node) >= 0)),
+            "nomad_retries": int(c.nomad_retries),
+            "nomad_flip_demotions": int(c.nomad_flip_demotions),
+            "nomad_shadow_drops": int(c.nomad_shadow_drops),
         }
 
 
@@ -401,19 +415,24 @@ def _build_step(mc: MachineConfig, budget: int, phase_b: str = "batched",
     shift = mc.map_shift
     n_map = mc.n_map
     rb = mc.radix_bits
+    nn = mc.n_nodes
     thp = mc.page_order > 0
     wm = alloc_mod.watermark_pages(mc)
+    # tier per node, indexed node+1 (node -1 -> slowest tier): one gather
+    # replaces the classic is_dram() select and generalizes to N tiers
+    # with identical f32 latency bits on the 2-tier machine.
+    text = jnp.asarray((mc.n_tiers - 1,) + mc.tier_of_node, I32)
 
     def f32(v):
         return jnp.asarray(v, F32)
 
     def read_lat(cc, node):
-        return jnp.where(is_dram(node), f32(cc.dram_read),
-                         f32(cc.nvmm_read))
+        return jnp.take(migrate_mod.tier_read_lat(cc, mc),
+                        jnp.take(text, node + 1))
 
     def write_lat(cc, node):
-        return jnp.where(is_dram(node), f32(cc.dram_write),
-                         f32(cc.nvmm_write))
+        return jnp.take(migrate_mod.tier_write_lat(cc, mc),
+                        jnp.take(text, node + 1))
 
     # ------------------------------ phase A --------------------------------
     def phase_a(st: SimState, cc: CostConfig, va_row, w_row, llc_rate):
@@ -477,6 +496,8 @@ def _build_step(mc: MachineConfig, budget: int, phase_b: str = "batched",
 
         access_recent = st.access_recent.at[
             jnp.where(vec, m, n_map)].add(1, mode="drop")
+        written_recent = st.written_recent.at[
+            jnp.where(vec & w_row, m, n_map)].add(1, mode="drop")
 
         cyc = st.cycles
         cyc = dataclasses.replace(
@@ -491,6 +512,7 @@ def _build_step(mc: MachineConfig, budget: int, phase_b: str = "batched",
             walk_mem_reads=c.walk_mem_reads + jnp.sum(walk_reads))
         st = dataclasses.replace(st, l1_tlb=l1_tlb, stlb=stlb, pde_pwc=pde,
                                  pdpte_pwc=pdpte, access_recent=access_recent,
+                                 written_recent=written_recent,
                                  cycles=cyc, counters=c)
         return st, active & ~mapped
 
@@ -501,10 +523,10 @@ def _build_step(mc: MachineConfig, budget: int, phase_b: str = "batched",
         # recompute per allocation: the interleave cursor advances with
         # every page handed out (PT pages consume round-robin slots too,
         # paper section 3.2 / Fig. 5)
-        data_prefs = alloc_mod.data_prefs_for(pc.data_policy, t, T,
+        data_prefs = alloc_mod.data_prefs_for(pc.data_policy, t, mc,
                                               st.interleave_ptr)
         prefs, ignore_wm = alloc_mod.pt_prefs_for(
-            pc.pt_policy, is_upper, t, T, data_prefs, thp)
+            pc.pt_policy, is_upper, t, mc, data_prefs, thp)
         node, slow, nf, nr, ok = alloc_mod.alloc_one(
             st.node_free, st.node_reclaimable, prefs, wm, ignore_wm)
         if is_upper or thp:
@@ -538,8 +560,8 @@ def _build_step(mc: MachineConfig, budget: int, phase_b: str = "batched",
             oom_step=jnp.where(oom & (st.oom_step < 0), st.step, st.oom_step),
             counters=dataclasses.replace(
                 st.counters,
-                pt_allocs=st.counters.pt_allocs.at[jnp.clip(node, 0, 3)].add(
-                    jnp.where(do, 1, 0)),
+                pt_allocs=st.counters.pt_allocs.at[
+                    jnp.clip(node, 0, nn - 1)].add(jnp.where(do, 1, 0)),
                 slow_allocs=st.counters.slow_allocs + jnp.where(do & slow, 1, 0),
                 oom_kills=st.counters.oom_kills + oom.astype(I32)))
         cost_acc = cost_acc + zero_cost + acost + jnp.where(
@@ -578,7 +600,7 @@ def _build_step(mc: MachineConfig, budget: int, phase_b: str = "batched",
             st2 = dataclasses.replace(st2, leaf_node=leaf)
 
             dprefs = alloc_mod.data_prefs_for(
-                pc.data_policy, tI, T, st2.interleave_ptr)
+                pc.data_policy, tI, mc, st2.interleave_ptr)
             node, slow, nf, nr, ok = alloc_mod.alloc_one(
                 st2.node_free, st2.node_reclaimable, dprefs, wm,
                 jnp.asarray(False))
@@ -605,7 +627,7 @@ def _build_step(mc: MachineConfig, budget: int, phase_b: str = "batched",
                 counters=dataclasses.replace(
                     st2.counters,
                     data_allocs=st2.counters.data_allocs.at[
-                        jnp.clip(node, 0, 3)].add(jnp.where(ok, 1, 0)),
+                        jnp.clip(node, 0, nn - 1)].add(jnp.where(ok, 1, 0)),
                     faults=st2.counters.faults + 1,
                     oom_kills=st2.counters.oom_kills + oom.astype(I32)))
             return st2, c
@@ -619,6 +641,8 @@ def _build_step(mc: MachineConfig, budget: int, phase_b: str = "batched",
         pde = tlbs.update_one(st.pde_pwc, tI, m >> rb, now, handled)
         pdpte = tlbs.update_one(st.pdpte_pwc, tI, m >> (2 * rb), now, handled)
         access_recent = st.access_recent.at[m].add(jnp.where(handled, 1, 0))
+        written_recent = st.written_recent.at[m].add(
+            jnp.where(handled & w_row[t], 1, 0))
 
         all_cost = fcost + wait_cost
         cyc = st.cycles
@@ -630,12 +654,12 @@ def _build_step(mc: MachineConfig, budget: int, phase_b: str = "batched",
                                                       0.0)))
         st = dataclasses.replace(st, l1_tlb=l1, stlb=stlb_, pde_pwc=pde,
                                  pdpte_pwc=pdpte, access_recent=access_recent,
-                                 cycles=cyc)
+                                 written_recent=written_recent, cycles=cyc)
         return st, cc, pc, va_row, w_row, fault_mask
 
     # ------------------------- phase B, batched ------------------------------
     def phase_b_batched(st: SimState, cc: CostConfig, pc: PolicyConfig,
-                        va_row, sched_row, fault_mask):
+                        va_row, w_row, sched_row, fault_mask):
         """Conflict-aware vectorized fault engine.
 
         Host-precomputed first-thread-wins masks (``sched_row``) resolve
@@ -697,7 +721,7 @@ def _build_step(mc: MachineConfig, budget: int, phase_b: str = "batched",
         nodes, slow, ok, act, gate, nfree, nrec, ptr, oom = \
             alloc_mod.alloc_many(st.node_free, st.node_reclaimable,
                                  st.interleave_ptr, st.oom_killed, wm,
-                                 pc.data_policy, pc.pt_policy, T, thp,
+                                 pc.data_policy, pc.pt_policy, mc,
                                  need_pt, winner, slot_thread=slot_thread)
         fault = winner & gate          # threads that run the fault handler
         wait = do & ~winner & gate     # an earlier thread mapped m this step
@@ -757,6 +781,8 @@ def _build_step(mc: MachineConfig, budget: int, phase_b: str = "batched",
         pdpte = tlbs.update(st.pdpte_pwc, m >> (2 * rb), way4, now, handled)
         access_recent = st.access_recent.at[
             jnp.where(handled, m, n_map)].add(1, mode="drop")
+        written_recent = st.written_recent.at[
+            jnp.where(handled & w_row, m, n_map)].add(1, mode="drop")
 
         # ---- counters and OOM latch -------------------------------------
         fails = act & ~ok
@@ -766,9 +792,9 @@ def _build_step(mc: MachineConfig, budget: int, phase_b: str = "batched",
         cnt = dataclasses.replace(
             cnt,
             pt_allocs=cnt.pt_allocs.at[
-                jnp.clip(nodes[:, :4], 0, 3).ravel()].add(
+                jnp.clip(nodes[:, :4], 0, nn - 1).ravel()].add(
                     pt_commit.ravel().astype(I32)),
-            data_allocs=cnt.data_allocs.at[jnp.clip(node_d, 0, 3)].add(
+            data_allocs=cnt.data_allocs.at[jnp.clip(node_d, 0, nn - 1)].add(
                 jnp.where(commit_d, 1, 0)),
             slow_allocs=cnt.slow_allocs
             + jnp.sum((pt_commit & slow[:, :4]).astype(I32)),
@@ -786,29 +812,38 @@ def _build_step(mc: MachineConfig, budget: int, phase_b: str = "batched",
             oom_step=jnp.where(any_fail & (st.oom_step < 0), st.step,
                                st.oom_step),
             l1_tlb=l1, stlb=stlb_, pde_pwc=pde, pdpte_pwc=pdpte,
-            access_recent=access_recent, cycles=cyc, counters=cnt)
+            access_recent=access_recent, written_recent=written_recent,
+            cycles=cyc, counters=cnt)
 
     # ------------------------------ frees -----------------------------------
     def free_segment(st: SimState, fid, seg_of_map, seg_of_leaf):
         mask_map = (seg_of_map == fid) & (st.data_node >= 0)
-        freed_per_node = jnp.zeros((4,), I32).at[
-            jnp.clip(st.data_node, 0, 3)].add(mask_map.astype(I32))
+        freed_per_node = jnp.zeros((nn,), I32).at[
+            jnp.clip(st.data_node, 0, nn - 1)].add(mask_map.astype(I32))
         freed_dram = mask_map & is_dram(st.data_node)
         ldc = st.leaf_dram_children.at[jnp.arange(n_map) >> rb].add(
             -freed_dram.astype(I32))
         data_node = jnp.where(mask_map, -1, st.data_node)
+        # Nomad shadows of freed granules are released with the segment.
+        mask_shadow = (seg_of_map == fid) & (st.shadow_node >= 0)
+        freed_shadow = jnp.zeros((nn,), I32).at[
+            jnp.clip(st.shadow_node, 0, nn - 1)].add(mask_shadow.astype(I32))
+        shadow_node = jnp.where(mask_shadow, -1, st.shadow_node)
         mask_leaf = (seg_of_leaf == fid) & (st.leaf_node >= 0)
-        freed_leaf = jnp.zeros((4,), I32).at[
-            jnp.clip(st.leaf_node, 0, 3)].add(mask_leaf.astype(I32))
+        freed_leaf = jnp.zeros((nn,), I32).at[
+            jnp.clip(st.leaf_node, 0, nn - 1)].add(mask_leaf.astype(I32))
         leaf_node = jnp.where(mask_leaf, -1, st.leaf_node)
         l1 = tlbs.invalidate_matching(st.l1_tlb, mask_map, 0)
         stlb_ = tlbs.invalidate_matching(st.stlb, mask_map, 0)
         pde = tlbs.invalidate_matching(st.pde_pwc, mask_leaf, 0)
         return dataclasses.replace(
             st, data_node=data_node, leaf_node=leaf_node,
+            shadow_node=shadow_node,
             leaf_dram_children=jnp.maximum(ldc, 0),
-            node_free=st.node_free + freed_per_node + freed_leaf,
+            node_free=st.node_free + freed_per_node + freed_leaf
+            + freed_shadow,
             access_recent=jnp.where(mask_map, 0, st.access_recent),
+            written_recent=jnp.where(mask_map, 0, st.written_recent),
             l1_tlb=l1, stlb=stlb_, pde_pwc=pde)
 
     # ------------------------------ full step --------------------------------
@@ -828,7 +863,10 @@ def _build_step(mc: MachineConfig, budget: int, phase_b: str = "batched",
         def scan_fn(s):
             # autonuma_scan self-gates on pc.autonuma & ~oom_killed, so the
             # shared schedule can fire for every lane of a mixed sweep.
-            s2, cost = migrate_mod.autonuma_scan(s, mc, cc, pc, wm, budget)
+            # The step's access row rides along as Nomad's concurrent-write
+            # abort condition (a no-op input for the other families).
+            s2, cost = migrate_mod.autonuma_scan(s, mc, cc, pc, wm, budget,
+                                                 va_row, w_row)
             cyc = dataclasses.replace(
                 s2.cycles,
                 total=s2.cycles.total + cost * f32(cc.mig_cost_scale) / T,
@@ -840,7 +878,7 @@ def _build_step(mc: MachineConfig, budget: int, phase_b: str = "batched",
 
         if phase_b == "batched":
             def run_phase_b(st):
-                return phase_b_batched(st, cc, pc, va_row, sched_row,
+                return phase_b_batched(st, cc, pc, va_row, w_row, sched_row,
                                        fault_mask)
         else:
             def run_phase_b(st):
@@ -895,17 +933,18 @@ def _build_fast_window(mc: MachineConfig):
     n_map = mc.n_map
     rb = mc.radix_bits
     thp = mc.page_order > 0
+    text = jnp.asarray((mc.n_tiers - 1,) + mc.tier_of_node, I32)
 
     def f32(v):
         return jnp.asarray(v, F32)
 
     def read_lat(cc, node):
-        return jnp.where(is_dram(node), f32(cc.dram_read),
-                         f32(cc.nvmm_read))
+        return jnp.take(migrate_mod.tier_read_lat(cc, mc),
+                        jnp.take(text, node + 1))
 
     def write_lat(cc, node):
-        return jnp.where(is_dram(node), f32(cc.dram_write),
-                         f32(cc.nvmm_write))
+        return jnp.take(migrate_mod.tier_write_lat(cc, mc),
+                        jnp.take(text, node + 1))
 
     def fast_window(st: SimState, cc: CostConfig, va_blk, wr_blk, llc_blk,
                     valid_blk):
@@ -1008,13 +1047,19 @@ def _build_fast_window(mc: MachineConfig):
 
         access_recent = st.access_recent.at[
             jnp.where(active, m, n_map)].add(1, mode="drop")
+        # Per-row adds commute (integer), so one whole-tile scatter equals
+        # the per-step path bit-for-bit; no scan tick can observe a
+        # mid-window value (event-free windows have no scans).
+        written_recent = st.written_recent.at[
+            jnp.where(active & wr_blk, m, n_map)].add(1, mode="drop")
         cyc = dataclasses.replace(cyc, total=ct, walk=cwk, stall=cst,
                                   data_mem=cdm)
         cnt = dataclasses.replace(cnt, l1_hits=n_l1, stlb_hits=n_stlb,
                                   walks=n_walk, walk_mem_reads=n_wmr)
         st = dataclasses.replace(
             st, l1_tlb=l1, stlb=stlb_c, pde_pwc=pde, pdpte_pwc=pdpte,
-            access_recent=access_recent, cycles=cyc, counters=cnt,
+            access_recent=access_recent, written_recent=written_recent,
+            cycles=cyc, counters=cnt,
             step=st.step + jnp.sum(valid_blk.astype(I32)))
 
         def const(v):
@@ -1187,6 +1232,12 @@ class TieredMemSimulator:
     time-blocked fast path over ``block``-step windows, bit-identical to
     per-step execution) or ``"per_step"`` (the retained one-step-per-scan
     reference).
+
+    The reference paths (``engine="per_step"`` / ``phase_b="sequential"``)
+    are differential-testing oracles, not production engines: after two
+    PRs of soak they are gated behind ``debug=True`` so production code
+    cannot silently run the slow paths (``tests/test_blocked.py`` and the
+    oracle suites still exercise them).
     """
 
     def __init__(self, mc: MachineConfig = MachineConfig(),
@@ -1194,12 +1245,18 @@ class TieredMemSimulator:
                  pc: PolicyConfig = PolicyConfig(),
                  phase_b: str = "batched",
                  engine: str = "blocked",
-                 block: int = DEFAULT_BLOCK):
+                 block: int = DEFAULT_BLOCK,
+                 debug: bool = False):
         assert engine in ("blocked", "per_step"), engine
+        if (engine != "blocked" or phase_b != "batched") and not debug:
+            raise ValueError(
+                f"engine={engine!r} phase_b={phase_b!r} are reference "
+                f"(oracle) paths; pass debug=True to run them")
         self.mc, self.cc, self.pc = mc, cc, pc
         self.phase_b = phase_b
         self.engine = engine
         self.block = int(block)
+        self.debug = bool(debug)
 
     def run(self, trace: Trace, state: Optional[SimState] = None) -> RunResult:
         mc = self.mc

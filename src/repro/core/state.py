@@ -47,16 +47,21 @@ class Counters:
     l4_mig_sibling_guard: jax.Array  # Alg.1 line 18: a child is still in DRAM
     l4_mig_lock_skip: jax.Array      # Alg.1/§5.3: PMD try_lock failed
     oom_kills: jax.Array
+    nomad_retries: jax.Array         # Nomad: promotions aborted by a write
+    nomad_flip_demotions: jax.Array  # Nomad: demotions served by a shadow flip
+    nomad_shadow_drops: jax.Array    # Nomad: shadows invalidated by a write
 
 
-def zero_counters() -> Counters:
+def zero_counters(n_nodes: int = 4) -> Counters:
     z = jnp.zeros((), I32)
     return Counters(l1_hits=z, stlb_hits=z, walks=z, walk_mem_reads=z,
-                    faults=z, data_allocs=jnp.zeros((4,), I32),
-                    pt_allocs=jnp.zeros((4,), I32), slow_allocs=z,
+                    faults=z, data_allocs=jnp.zeros((n_nodes,), I32),
+                    pt_allocs=jnp.zeros((n_nodes,), I32), slow_allocs=z,
                     data_migrations=z, demotions=z, l4_mig_success=z,
                     l4_mig_already_dest=z, l4_mig_in_dram=z,
-                    l4_mig_sibling_guard=z, l4_mig_lock_skip=z, oom_kills=z)
+                    l4_mig_sibling_guard=z, l4_mig_lock_skip=z, oom_kills=z,
+                    nomad_retries=z, nomad_flip_demotions=z,
+                    nomad_shadow_drops=z)
 
 
 @jax.tree_util.register_dataclass
@@ -89,16 +94,23 @@ class SimState:
     top_node: jax.Array           # i32[n_top]
     root_node: jax.Array          # i32[1]
     leaf_dram_children: jax.Array  # i32[n_leaf]  #mapped children on DRAM
+    # Nomad non-exclusive tiering: a committed promotion keeps a clean
+    # shadow copy on its source node (-1 = none).  A later demotion of the
+    # same page "flips" to the shadow for free; a write invalidates it.
+    shadow_node: jax.Array        # i32[n_map]
 
     # --- allocator ----------------------------------------------------------
-    node_free: jax.Array          # i32[4]
-    node_reclaimable: jax.Array   # i32[4] page-cache style reserve
+    node_free: jax.Array          # i32[n_nodes]
+    node_reclaimable: jax.Array   # i32[n_nodes] page-cache style reserve
     interleave_ptr: jax.Array     # i32[] round-robin cursor
     oom_killed: jax.Array         # bool[] OOM handler fired
     oom_step: jax.Array           # i32[] step at which it fired (-1)
 
     # --- hotness (AutoNUMA input) -------------------------------------------
     access_recent: jax.Array      # i32[n_map], periodically halved
+    # Writes since the last balancing scan (Nomad's transactional-abort
+    # and shadow-invalidation input); cleared at every Nomad scan tick.
+    written_recent: jax.Array     # i32[n_map]
 
     # --- translation caches -------------------------------------------------
     l1_tlb: tlbs.TlbArray
@@ -126,24 +138,28 @@ def init_state(mc: MachineConfig) -> SimState:
         top_node=jnp.full((n_top,), -1, I32),
         root_node=jnp.full((1,), -1, I32),
         leaf_dram_children=jnp.zeros((n_leaf,), I32),
+        shadow_node=jnp.full((n_map,), -1, I32),
         node_free=cap - reclaim,
         node_reclaimable=reclaim,
         interleave_ptr=jnp.zeros((), I32),
         oom_killed=jnp.zeros((), jnp.bool_),
         oom_step=jnp.full((), -1, I32),
         access_recent=jnp.zeros((n_map,), I32),
+        written_recent=jnp.zeros((n_map,), I32),
         l1_tlb=tlbs.make_tlb(mc.n_threads, mc.l1_tlb_sets, mc.l1_tlb_ways),
         stlb=tlbs.make_tlb(mc.n_threads, mc.stlb_sets, mc.stlb_ways),
         pde_pwc=tlbs.make_tlb(mc.n_threads, 1, mc.pde_pwc_entries),
         pdpte_pwc=tlbs.make_tlb(mc.n_threads, 1, mc.pdpte_pwc_entries),
         cycles=zero_cycles(mc.n_threads),
-        counters=zero_counters(),
+        counters=zero_counters(mc.n_nodes),
         step=jnp.zeros((), I32),
     )
 
 
 def is_dram(node: jax.Array) -> jax.Array:
-    """True for DRAM nodes (0, 1); NVMM nodes are 2, 3."""
+    """True for DRAM nodes.  Node numbering is tier-major with two nodes
+    per tier, so tier 0 (DRAM) is always nodes (0, 1) — valid for any
+    tier count."""
     return (node >= 0) & (node < 2)
 
 

@@ -222,6 +222,7 @@ def sweep_lanes(mc: MachineConfig,
                 engine: str = "blocked",
                 block: int = DEFAULT_BLOCK,
                 group: Optional[int] = None,
+                debug: bool = False,
                 ) -> List[RunResult]:
     """Run L independent (cost, policy, trace) lanes as one batched scan.
 
@@ -244,9 +245,18 @@ def sweep_lanes(mc: MachineConfig,
     ``lane_sharding`` — ``None`` (single device), ``"auto"`` (shard the
     lane axis over every local device that divides the lane count), or an
     explicit 1-D ``"lanes"`` :class:`jax.sharding.Mesh`.
+
+    The per-step engine and the sequential fault path are reference
+    (oracle) configurations kept for differential testing; production
+    callers get the blocked/batched fast path.  Pass ``debug=True`` to
+    run a reference path deliberately.
     """
     if engine not in ("blocked", "per_step"):
         raise ValueError(f"unknown engine {engine!r}")
+    if (engine != "blocked" or phase_b != "batched") and not debug:
+        raise ValueError(
+            f"engine={engine!r} phase_b={phase_b!r} are reference (oracle) "
+            "paths; pass debug=True to run them")
     policies = list(policies)
     ccs = list(ccs)
     tr_list = list(traces)
@@ -413,6 +423,7 @@ def sweep(mc: MachineConfig,
           lane_sharding=None,
           engine: str = "blocked",
           block: int = DEFAULT_BLOCK,
+          debug: bool = False,
           ) -> Union[List[RunResult], List[List[RunResult]]]:
     """Run every (trace, policy) pair as one batched compiled scan.
 
@@ -443,6 +454,6 @@ def sweep(mc: MachineConfig,
         [p for _ in range(M) for p in policies],
         [tr for tr in tr_list for _ in range(P_)],
         phase_b=phase_b, budget=budget, lane_sharding=lane_sharding,
-        engine=engine, block=block)
+        engine=engine, block=block, debug=debug)
     results = [flat[j * P_:(j + 1) * P_] for j in range(M)]
     return results[0] if single else results

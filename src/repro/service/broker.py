@@ -285,7 +285,10 @@ class SimBroker:
             results = sweep_lanes(
                 mc, ccs, pcs, trs, phase_b=phase_b, budget=qbudget,
                 lane_sharding=self.lane_sharding, engine=engine,
-                group=qgroup)
+                group=qgroup,
+                # queries on a reference path already carried debug=True
+                # (SimQuery validates); the bucket inherits it
+                debug=(engine != "blocked" or phase_b != "batched"))
         except Exception as exc:
             # a poisoned microbatch must not strand its futures: fail the
             # whole batch (waiters raise instead of spinning) and let the

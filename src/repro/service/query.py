@@ -46,7 +46,9 @@ class SimQuery:
 
     ``phase_b`` and ``engine`` select the fault engine and the stepper
     (see ``core.sim``); both are part of the query's cache identity and
-    of its bucket key (lanes batched into one program must agree).
+    of its bucket key (lanes batched into one program must agree).  The
+    non-default combinations are reference (oracle) paths and require
+    ``debug=True`` — identity-irrelevant, like the scheduler knobs.
     """
 
     trace: Union[Trace, TraceSpec]
@@ -57,6 +59,7 @@ class SimQuery:
     engine: str = "blocked"
     priority: int = 0
     deadline: Optional[float] = None
+    debug: bool = False
 
     def __post_init__(self):
         if not isinstance(self.trace, (Trace, TraceSpec)):
@@ -67,6 +70,11 @@ class SimQuery:
             raise ValueError(f"unknown phase_b {self.phase_b!r}")
         if self.engine not in ("blocked", "per_step"):
             raise ValueError(f"unknown engine {self.engine!r}")
+        if (self.engine != "blocked" or self.phase_b != "batched") \
+                and not self.debug:
+            raise ValueError(
+                f"engine={self.engine!r} phase_b={self.phase_b!r} are "
+                "reference (oracle) paths; pass debug=True to query them")
 
 
 def query_cache_key(q: SimQuery, canonical: Trace) -> Tuple:

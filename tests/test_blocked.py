@@ -106,7 +106,8 @@ def assert_blocked_matches_per_step(mc, pc, trace, cc=None, block=16):
     cc = cc or CostConfig()
     blk = TieredMemSimulator(mc=mc, cc=cc, pc=pc, engine="blocked",
                              block=block).run(trace)
-    ps = TieredMemSimulator(mc=mc, cc=cc, pc=pc, engine="per_step").run(trace)
+    ps = TieredMemSimulator(mc=mc, cc=cc, pc=pc, engine="per_step",
+                            debug=True).run(trace)
     assert_states_bitwise(blk.final_state, ps.final_state, pc.label())
     for k in blk.timeline:
         np.testing.assert_array_equal(blk.timeline[k], ps.timeline[k],
@@ -148,9 +149,10 @@ def test_fault_heavy_and_free_bitwise():
     for pc in POLICIES[:2]:
         for phase_b in ("batched", "sequential"):
             blk = TieredMemSimulator(mc=mc, cc=cc, pc=pc, engine="blocked",
-                                     block=16, phase_b=phase_b).run(trace)
+                                     block=16, phase_b=phase_b,
+                                     debug=True).run(trace)
             ps = TieredMemSimulator(mc=mc, cc=cc, pc=pc, engine="per_step",
-                                    phase_b=phase_b).run(trace)
+                                    phase_b=phase_b, debug=True).run(trace)
             assert_states_bitwise(blk.final_state, ps.final_state,
                                   f"{pc.label()}/{phase_b}")
         assert_matches_oracle(blk, mc, cc, pc, trace)
@@ -192,7 +194,8 @@ def test_resume_mid_block():
     mc = tiny_machine()
     pc = POLICIES[0]
     trace = steady_trace(mc, steps=120, seed=13)
-    full = TieredMemSimulator(mc=mc, pc=pc, engine="per_step").run(trace)
+    full = TieredMemSimulator(mc=mc, pc=pc, engine="per_step",
+                              debug=True).run(trace)
 
     cut = 75                      # not a multiple of any pow2 block size
     first = Trace(va=trace.va[:cut], is_write=trace.is_write[:cut],
@@ -225,7 +228,7 @@ def test_vmapped_sweep_bitwise():
     pols += [PolicyConfig(data_policy=d, pt_policy=PT_BIND_HIGH, mig=True,
                           autonuma=False) for d in (FIRST_TOUCH, INTERLEAVE)]
     blk = sweep(mc, cc, pols, trace, engine="blocked", block=16)
-    ps = sweep(mc, cc, pols, trace, engine="per_step")
+    ps = sweep(mc, cc, pols, trace, engine="per_step", debug=True)
     for pc, a, b in zip(pols, blk, ps):
         assert_states_bitwise(a.final_state, b.final_state, pc.label())
         for k in a.timeline:
@@ -258,6 +261,7 @@ def test_alloc_many_conflict_groups_match_full_scan():
     don't-care by contract)."""
     rng = np.random.default_rng(0)
     T = 16
+    amc = MachineConfig(n_threads=T)
     wm = jnp.asarray([5, 5, 5, 5], jnp.int32)
     for trial in range(20):
         n_winners = int(rng.integers(0, T + 1))
@@ -277,7 +281,7 @@ def test_alloc_many_conflict_groups_match_full_scan():
         slot_thread = np.full(G, T, np.int64)
         slot_thread[slot[winners]] = np.where(winners)[0]
 
-        args = (free, rec, ptr, oom0, wm, dpol, ppol, T, False,
+        args = (free, rec, ptr, oom0, wm, dpol, ppol, amc,
                 jnp.asarray(need_pt), jnp.asarray(need_data))
         ref = alloc_mod.alloc_many(*args)
         got = alloc_mod.alloc_many(*args,

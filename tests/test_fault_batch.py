@@ -109,7 +109,7 @@ def assert_batched_matches_sequential(mc, pc, trace, cc=None):
     cc = cc or CostConfig()
     bat = TieredMemSimulator(mc=mc, cc=cc, pc=pc, phase_b="batched").run(trace)
     seq = TieredMemSimulator(mc=mc, cc=cc, pc=pc,
-                             phase_b="sequential").run(trace)
+                             phase_b="sequential", debug=True).run(trace)
     s1, s2 = bat.summary(), seq.summary()
     for k in EXACT_KEYS:
         assert s1[k] == s2[k], f"{pc.label()}: {k}: {s1[k]} != {s2[k]}"
@@ -212,7 +212,7 @@ def test_sweep_lanes_match_sequential_reference():
     batch = sweep(mc, cc, pols, trace, phase_b="batched")
     for pc, res in zip(pols, batch):
         seq = TieredMemSimulator(mc=mc, cc=cc, pc=pc,
-                                 phase_b="sequential").run(trace)
+                                 phase_b="sequential", debug=True).run(trace)
         s1, s2 = res.summary(), seq.summary()
         for k in EXACT_KEYS:
             assert s1[k] == s2[k], f"{pc.label()}: {k}: {s1[k]} != {s2[k]}"
@@ -310,7 +310,8 @@ def test_resume_after_cross_segment_free_reallocates_leaf():
                       autonuma=False)
     finals = {}
     for mode in ("batched", "sequential"):
-        sim = TieredMemSimulator(mc=mc, pc=pc, phase_b=mode)
+        sim = TieredMemSimulator(mc=mc, pc=pc, phase_b=mode,
+                                 debug=(mode == "sequential"))
         st = jax.tree.map(jnp.asarray, sim.run(first).final_state)
         assert int(np.asarray(st.leaf_node)[0]) == -1      # leaf freed
         assert int(np.asarray(st.data_node)[8]) >= 0       # page survives
