@@ -27,6 +27,21 @@ from repro.core import (CostConfig, MachineConfig, PolicyConfig,
 
 ART = Path(__file__).resolve().parent.parent / "artifacts" / "bench"
 
+# Process-wide benchmark telemetry (lazy).  Drivers report into it, embed
+# its snapshot in their artifacts, and ``run.py --verbose`` prints it
+# after each driver (run.py resets it between drivers so snapshots stay
+# per-driver).  Tracing is on: benchmark runs are exactly where a
+# Perfetto-loadable trace of the query lifecycle is worth its memory.
+_TELEMETRY = None
+
+
+def telemetry():
+    global _TELEMETRY
+    if _TELEMETRY is None:
+        from repro.obs import Telemetry
+        _TELEMETRY = Telemetry(tracing=True)
+    return _TELEMETRY
+
 # scaled run dimensions (see DESIGN.md section 2: ratios, not magnitudes)
 FOOTPRINT = 1 << 18
 RUN_STEPS = 8192

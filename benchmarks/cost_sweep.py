@@ -82,7 +82,7 @@ def main(quick: bool = False):
     ]
 
     broker = SimBroker(max_lanes=len(RATIOS) * len(policies),
-                       lane_sharding="auto")
+                       lane_sharding="auto", telemetry=common.telemetry())
     queries = [SimQuery(trace=spec, policy=pc, cost=cost_for(r), machine=mc)
                for r in RATIOS for _, pc in policies]
 
@@ -109,7 +109,7 @@ def main(quick: bool = False):
             f"base_walk_share={by_pol['interleave']['walk_share']:.3f}"))
     results["_meta"] = {
         "footprint": fp, "run_steps": run_steps, "seconds": secs,
-        "broker_stats": broker.stats.as_dict(),
+        "snapshot": broker.snapshot(),
     }
     common.emit(rows)
     common.save_artifact("cost_sweep", results)
@@ -185,7 +185,8 @@ def scenario_main(quick: bool = False):
                         machine=machines[topo])
                for topo, r, wl, fam in cells]
 
-    broker = SimBroker(max_lanes=len(queries), lane_sharding="auto")
+    broker = SimBroker(max_lanes=len(queries), lane_sharding="auto",
+                       telemetry=common.telemetry())
     # one compile per (tier topology, trace shape) bucket — the broker's
     # own quantization; computed up front so the emitted artifact can
     # assert the whole matrix really shared that few programs
@@ -240,7 +241,7 @@ def scenario_main(quick: bool = False):
         "ratios": [f"{r:g}x" for r in ratios], "workloads": list(wls),
         "families": list(families),
         "compile_check": compile_check,
-        "broker_stats": broker.stats.as_dict(),
+        "snapshot": broker.snapshot(),
     }
     common.emit(rows)
     common.save_artifact("scenario_matrix", results)

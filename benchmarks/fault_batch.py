@@ -38,17 +38,19 @@ def _timed(fn):
 
 
 def bench_trace(mc, tr, pols, cc):
+    tel = common.telemetry()
     out = {"steps": tr.n_steps, "populate_steps": tr.populate_steps}
     for lanes, label in ((1, "1lane"), (len(pols), f"{len(pols)}lane")):
         row = {}
         for mode in ("sequential", "batched"):
             if lanes == 1:
                 sim = TieredMemSimulator(mc=mc, cc=cc, pc=pols[0],
-                                         phase_b=mode, debug=True)
+                                         phase_b=mode, debug=True,
+                                         telemetry=tel)
                 secs = _timed(lambda: sim.run(tr))
             else:
                 secs = _timed(lambda: sweep(mc, cc, pols, tr, phase_b=mode,
-                                            debug=True))
+                                            debug=True, telemetry=tel))
             row[mode] = {"seconds": secs,
                          "lane_steps_per_sec": tr.n_steps * lanes / secs}
         row["speedup"] = (row["batched"]["lane_steps_per_sec"]
@@ -84,6 +86,7 @@ def main(quick: bool = False):
                 f"batched_sps={r['batched']['lane_steps_per_sec']:.0f};"
                 f"sequential_sps={r['sequential']['lane_steps_per_sec']:.0f}"))
     common.emit(rows)
+    results["telemetry"] = common.telemetry().snapshot()
     common.save_artifact("fault_batch", results)
     return results
 

@@ -53,6 +53,9 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated figure subset, e.g. fig9,table4 "
                          "(see the registered list below)")
+    ap.add_argument("--verbose", action="store_true",
+                    help="print each driver's telemetry snapshot (metrics "
+                         "registry + trace counts) after it finishes")
     args = ap.parse_args()
 
     names = list(FIGURES)
@@ -64,12 +67,19 @@ def main() -> None:
                      f"registered: {', '.join(FIGURES)}")
 
     import importlib
+    import json
+
+    from . import common
+
     print("name,seconds,derived", flush=True)
     failures = []
     for name in names:
         target = FIGURES[name][0]
         modname, _, func = target.partition(":")
         mod = importlib.import_module(f"benchmarks.{modname}")
+        # scope the shared telemetry to this driver so --verbose (and any
+        # snapshot the driver embeds) reads one driver's worth of data
+        common.telemetry().reset()
         t0 = time.time()
         try:
             getattr(mod, func or "main")(quick=args.quick)
@@ -79,6 +89,11 @@ def main() -> None:
             traceback.print_exc()
             print(f"{name}/done,{time.time() - t0:.1f},"
                   f"FAILED:{type(e).__name__}", flush=True)
+        if args.verbose:
+            snap = common.telemetry().snapshot()
+            print(f"# telemetry[{name}] "
+                  f"{json.dumps(snap, sort_keys=True, default=float)}",
+                  flush=True)
     if failures:
         sys.exit(1)
 

@@ -87,7 +87,9 @@ def main(quick: bool = False):
         max_lanes = 64
     n = len(queries)
 
-    broker = SimBroker(max_lanes=max_lanes, lane_sharding="auto")
+    tel = common.telemetry()
+    broker = SimBroker(max_lanes=max_lanes, lane_sharding="auto",
+                       telemetry=tel)
     canonical = [broker.canonical_trace(q) for q in queries]
 
     # warm both paths: compiles + fault-schedule host passes out of the
@@ -110,6 +112,10 @@ def main(quick: bool = False):
             broker_s = secs
             stats = {k: v - stats0[k]
                      for k, v in broker.stats.as_dict().items()}
+            # the ratio is not delta-able; recompute it over the window
+            stats["pad_ratio"] = (stats["pad_lanes"]
+                                  / max(stats["pad_lanes"]
+                                        + stats["lanes_run"], 1))
 
     compiles_before = sweep_compile_count()
     t0 = time.time()
@@ -133,7 +139,15 @@ def main(quick: bool = False):
                    "recompiles": cached_recompiles,
                    "speedup_vs_naive": naive_s / cached_s},
         "broker_stats": stats,       # measured-run delta (warm-up excluded)
+        # end-to-end observability over the whole driver run (warm-up,
+        # measured reps and cached replay): lifecycle histograms, per-
+        # bucket compile counters, cache + migration totals
+        "snapshot": broker.snapshot(),
     }
+    common.ART.mkdir(parents=True, exist_ok=True)
+    trace_path = common.ART / "service_trace.json"
+    if tel.export_trace(trace_path):
+        results["trace_file"] = str(trace_path)
     rows = [
         (f"service_throughput/naive/{n}q", naive_s, f"qps={n / naive_s:.1f}"),
         (f"service_throughput/broker/{n}q", broker_s,

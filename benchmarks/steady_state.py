@@ -31,17 +31,19 @@ def autonuma_policies():
 
 
 def bench_trace(mc, tr, pols, cc):
+    tel = common.telemetry()
     out = {"steps": tr.n_steps, "populate_steps": tr.populate_steps}
     for lanes, label in ((1, "1lane"), (len(pols), f"{len(pols)}lane")):
         row = {}
         for engine in ("per_step", "blocked"):
             if lanes == 1:
                 sim = TieredMemSimulator(mc=mc, cc=cc, pc=pols[0],
-                                         engine=engine, debug=True)
+                                         engine=engine, debug=True,
+                                         telemetry=tel)
                 secs = _timed(lambda: sim.run(tr))
             else:
                 secs = _timed(lambda: sweep(mc, cc, pols, tr, engine=engine,
-                                            debug=True))
+                                            debug=True, telemetry=tel))
             row[engine] = {"seconds": secs,
                            "lane_steps_per_sec": tr.n_steps * lanes / secs}
         row["speedup"] = (row["blocked"]["lane_steps_per_sec"]
@@ -78,6 +80,9 @@ def main(quick: bool = False):
                 f"blocked_sps={r['blocked']['lane_steps_per_sec']:.0f};"
                 f"per_step_sps={r['per_step']['lane_steps_per_sec']:.0f}"))
     common.emit(rows)
+    # fast-vs-event window classification + device-time histograms for
+    # the measured runs, alongside the headline numbers
+    results["telemetry"] = common.telemetry().snapshot()
     common.save_artifact("steady_state", results)
     return results
 

@@ -96,6 +96,7 @@ import numpy as np
 from . import alloc as alloc_mod
 from . import migrate as migrate_mod
 from . import tlbs
+from ..obs import or_null
 from .config import (CostConfig, MachineConfig, PolicyConfig, INTERLEAVE,
                      PT_BIND_HIGH, PT_FOLLOW_DATA)
 from .state import SimState, init_state, is_dram
@@ -1238,6 +1239,12 @@ class TieredMemSimulator:
     PRs of soak they are gated behind ``debug=True`` so production code
     cannot silently run the slow paths (``tests/test_blocked.py`` and the
     oracle suites still exercise them).
+
+    ``telemetry`` (optional :class:`repro.obs.Telemetry`) records run
+    counters, the fast/event window classification and — when tracing —
+    a ``sim.run`` span plus per-window ``window.fast`` / ``window.event``
+    spans.  All hooks are host-side: the compiled program and its
+    outputs are bitwise-identical with telemetry on or off.
     """
 
     def __init__(self, mc: MachineConfig = MachineConfig(),
@@ -1246,7 +1253,8 @@ class TieredMemSimulator:
                  phase_b: str = "batched",
                  engine: str = "blocked",
                  block: int = DEFAULT_BLOCK,
-                 debug: bool = False):
+                 debug: bool = False,
+                 telemetry=None):
         assert engine in ("blocked", "per_step"), engine
         if (engine != "blocked" or phase_b != "batched") and not debug:
             raise ValueError(
@@ -1257,8 +1265,11 @@ class TieredMemSimulator:
         self.engine = engine
         self.block = int(block)
         self.debug = bool(debug)
+        self.telemetry = or_null(telemetry)
 
     def run(self, trace: Trace, state: Optional[SimState] = None) -> RunResult:
+        tel = self.telemetry
+        run_t0 = tel.now()
         mc = self.mc
         assert trace.va.shape[1] == mc.n_threads, \
             f"trace has {trace.va.shape[1]} threads, machine {mc.n_threads}"
@@ -1278,13 +1289,34 @@ class TieredMemSimulator:
             block = min(self.block, pow2ceil(trace.n_steps))
             xs, valid = blocked_xs(trace, mc, self.pc, start_step=start,
                                    block=block, sched=sched)
+            win_event = None
+            if tel.enabled:
+                # the host-side window classification (xs[-1]) is the
+                # fast-path vs event-window split the blocked engine ran
+                win_event = np.asarray(xs[-1])
+                n_ev = int(np.count_nonzero(win_event))
+                tel.counter("sim.windows_event").inc(n_ev)
+                tel.counter("sim.windows_fast").inc(len(win_event) - n_ev)
             run_all = _compiled_run(mc, budget, self.phase_b, "blocked",
                                     block, group)
+            dev_t0 = tel.now()
             final, outs = run_all(st0, self.cc, self.pc, xs, seg_of_map,
                                   seg_of_leaf)
             timeline = {k: np.asarray(v)[valid]
                         for k, v in zip(TIMELINE_KEYS, outs)}
+            if dev_t0 is not None:
+                # the compiled scan is opaque: device time attributes
+                # uniformly across windows, the classification is exact
+                dev_t1 = tel.now()
+                w_dur = (dev_t1 - dev_t0) / max(len(win_event), 1)
+                for i, is_ev in enumerate(win_event):
+                    tel.add_span(
+                        "window.event" if is_ev else "window.fast",
+                        dev_t0 + i * w_dur, dev_t0 + (i + 1) * w_dur,
+                        cat="engine", tid=1, args={"window": i})
         else:
+            if tel.enabled:
+                tel.counter("sim.steps").inc(trace.n_steps)
             xs = trace_xs(trace, mc, self.pc, start_step=start, sched=sched)
             run_all = _compiled_run(mc, budget, self.phase_b, "per_step",
                                     0, group)
@@ -1292,5 +1324,12 @@ class TieredMemSimulator:
                                   seg_of_leaf)
             timeline = {k: np.asarray(v) for k, v in zip(TIMELINE_KEYS, outs)}
         final = jax.device_get(final)
+        if tel.enabled:
+            tel.counter("sim.runs", engine=self.engine).inc()
+            if run_t0 is not None:
+                tel.add_span("sim.run", run_t0, tel.now(), cat="engine",
+                             args={"steps": trace.n_steps,
+                                   "engine": self.engine,
+                                   "trace": trace.name})
         return RunResult(final_state=final, timeline=timeline,
                          trace_name=trace.name, policy_label=self.pc.label())

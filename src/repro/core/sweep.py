@@ -57,6 +57,7 @@ Constraints inherited from the step being compiled once for all lanes:
 """
 from __future__ import annotations
 
+import time
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
@@ -64,6 +65,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..obs import or_null
 from .config import CostConfig, MachineConfig, PolicyConfig
 from .sim import (DEFAULT_BLOCK, RunResult, SCHED_DO, TIMELINE_KEYS, Trace,
                   _build_fast_window, _build_step, fault_group_bound,
@@ -223,6 +225,7 @@ def sweep_lanes(mc: MachineConfig,
                 block: int = DEFAULT_BLOCK,
                 group: Optional[int] = None,
                 debug: bool = False,
+                telemetry=None,
                 ) -> List[RunResult]:
     """Run L independent (cost, policy, trace) lanes as one batched scan.
 
@@ -250,7 +253,18 @@ def sweep_lanes(mc: MachineConfig,
     (oracle) configurations kept for differential testing; production
     callers get the blocked/batched fast path.  Pass ``debug=True`` to
     run a reference path deliberately.
+
+    ``telemetry`` (optional :class:`repro.obs.Telemetry`) records
+    host-side counters (lanes, fast vs event windows), a device-time
+    histogram and — when tracing — ``sweep.prepare`` / ``sweep.device``
+    spans plus one ``window.fast`` / ``window.event`` span per scan
+    window (window classification is host data; device time is
+    attributed uniformly across windows since the compiled scan is
+    opaque).  Every hook is host-side Python: the compiled program and
+    its outputs are bitwise-identical with telemetry on or off.
     """
+    tel = or_null(telemetry)
+    prep_t0 = tel.now()
     if engine not in ("blocked", "per_step"):
         raise ValueError(f"unknown engine {engine!r}")
     if (engine != "blocked" or phase_b != "batched") and not debug:
@@ -396,10 +410,43 @@ def sweep_lanes(mc: MachineConfig,
                               eff_group)
     _SIGNATURES.add((mc, eff_budget, phase_b, engine, eff_block, eff_group,
                      L, S, shard_key))
+
+    if tel.enabled:
+        tel.counter("sweep.calls", engine=engine).inc()
+        tel.counter("sweep.lanes", engine=engine).inc(L)
+        if engine == "blocked":
+            n_ev = int(np.count_nonzero(win_event))
+            tel.counter("sweep.windows_event").inc(n_ev)
+            tel.counter("sweep.windows_fast").inc(len(win_event) - n_ev)
+        else:
+            tel.counter("sweep.steps").inc(S)
+        if prep_t0 is not None:
+            tel.add_span("sweep.prepare", prep_t0, tel.now(), cat="engine",
+                         args={"lanes": L, "steps": S, "engine": engine})
+
+    dev_t0 = tel.now()
+    wall_t0 = time.perf_counter()
     final, outs = run_sweep(st0, lane_cc, lane_pc, xs, seg_of_map,
                             seg_of_leaf)
     final = jax.device_get(final)
     outs = [np.asarray(o) for o in jax.device_get(outs)]
+    if tel.enabled:
+        tel.histogram("sweep.device_seconds").observe(
+            time.perf_counter() - wall_t0)
+    if dev_t0 is not None:
+        dev_t1 = tel.now()
+        tel.add_span("sweep.device", dev_t0, dev_t1, cat="engine",
+                     args={"lanes": L, "steps": S, "engine": engine})
+        if engine == "blocked":
+            # The compiled scan is opaque, so device wall time is
+            # attributed uniformly across windows; the fast/event
+            # classification itself is exact (host-side schedule).
+            n_w = len(win_event)
+            w_dur = (dev_t1 - dev_t0) / max(n_w, 1)
+            for i, is_ev in enumerate(win_event):
+                tel.add_span("window.event" if is_ev else "window.fast",
+                             dev_t0 + i * w_dur, dev_t0 + (i + 1) * w_dur,
+                             cat="engine", tid=1, args={"window": i})
     if engine == "blocked":
         # [n_windows, block, L] -> [steps, L], pad rows dropped in order
         outs = [o[valid_host] for o in outs]
@@ -424,6 +471,7 @@ def sweep(mc: MachineConfig,
           engine: str = "blocked",
           block: int = DEFAULT_BLOCK,
           debug: bool = False,
+          telemetry=None,
           ) -> Union[List[RunResult], List[List[RunResult]]]:
     """Run every (trace, policy) pair as one batched compiled scan.
 
@@ -454,6 +502,6 @@ def sweep(mc: MachineConfig,
         [p for _ in range(M) for p in policies],
         [tr for tr in tr_list for _ in range(P_)],
         phase_b=phase_b, budget=budget, lane_sharding=lane_sharding,
-        engine=engine, block=block, debug=debug)
+        engine=engine, block=block, debug=debug, telemetry=telemetry)
     results = [flat[j * P_:(j + 1) * P_] for j in range(M)]
     return results[0] if single else results

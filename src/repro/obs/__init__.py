@@ -1,0 +1,27 @@
+"""End-to-end telemetry for the simulation service stack.
+
+Three layers:
+
+  * :mod:`repro.obs.metrics` — a metrics registry (counters, gauges,
+    fixed log-bucket histograms, labeled) that the broker, result cache,
+    sweep engine, search drivers and benchmark drivers report into;
+  * :mod:`repro.obs.tracing` — a structured span recorder exporting
+    Chrome/Perfetto ``trace_event`` JSON (open a 64-query burst in a
+    trace viewer), plus the validator CI runs on exported traces;
+  * :mod:`repro.obs.telemetry` — the :class:`Telemetry` facade with a
+    near-zero-cost :data:`NULL` default, so the instrumented stack pays
+    one attribute load per hook when observability is off, and the
+    compiled engines stay bitwise-identical either way.
+
+``python -m repro.obs.validate trace.json`` checks an exported trace is
+well-formed, balanced ``trace_event`` JSON (the CI telemetry smoke).
+"""
+from .metrics import Counter, Gauge, Histogram, MetricsRegistry
+from .telemetry import NULL, NullTelemetry, Telemetry, or_null
+from .tracing import SpanRecorder, validate_trace_events
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "NULL", "NullTelemetry", "Telemetry", "or_null",
+    "SpanRecorder", "validate_trace_events",
+]

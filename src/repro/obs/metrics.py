@@ -1,0 +1,197 @@
+"""The metrics registry: counters, gauges, log-bucket histograms.
+
+The service stack attributes *simulated* cycles obsessively (per-level
+walk latency, migration overhead — the paper's whole argument) but until
+this module it could not attribute its *own* time: ``BrokerStats`` was
+six bare counters and a slow flush or a compile storm was invisible
+until a CI perf bar tripped.  This registry is the substrate every
+service layer reports into — the broker (queue-wait and flush-latency
+histograms, per-bucket compile counts), the result cache
+(hit/miss/evict/spill), the sweep engine (fast vs event windows, device
+seconds) and the benchmark drivers (which embed ``snapshot()`` in their
+committed artifacts so CI perf numbers carry their own explanation).
+
+Design constraints, in order:
+
+  * **host-side only** — nothing here ever touches a traced value; the
+    compiled engines are bitwise-identical with telemetry on or off
+    (asserted in ``tests/test_obs.py``);
+  * **near-zero cost when off** — the no-op twins in ``telemetry.py``
+    reduce every call site to one attribute load and one no-op call;
+  * **stable snapshots** — ``snapshot()`` emits a flat, JSON-friendly
+    dict (``name`` or ``name{label=value,...}`` keys, sorted labels) so
+    artifacts diff cleanly across runs.
+
+Histograms use fixed log-scale buckets (powers of ``base`` from
+``lo`` up to ``hi``): latencies span orders of magnitude, and fixed
+boundaries mean two snapshots are mergeable bucket-by-bucket — the
+property the ROADMAP's fleet-wide metrics item needs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+LabelKey = Tuple[Tuple[str, str], ...]
+
+
+def _label_key(labels: Dict[str, object]) -> LabelKey:
+    return tuple(sorted((k, str(v)) for k, v in labels.items()))
+
+
+def _fmt(name: str, labels: LabelKey) -> str:
+    if not labels:
+        return name
+    inner = ",".join(f"{k}={v}" for k, v in labels)
+    return f"{name}{{{inner}}}"
+
+
+class Counter:
+    """Monotonically increasing value (events, lanes, compiles)."""
+
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0
+
+    def inc(self, n=1) -> None:
+        self.value += n
+
+    def snapshot(self):
+        return self.value
+
+
+class Gauge:
+    """Last-written value (queue depth, pages-per-tier)."""
+
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0
+
+    def set(self, v) -> None:
+        self.value = v
+
+    def inc(self, n=1) -> None:
+        self.value += n
+
+    def snapshot(self):
+        return self.value
+
+
+class Histogram:
+    """Fixed log-scale buckets: bucket i counts observations in
+    ``(lo * base**(i-1), lo * base**i]``, with underflow in bucket 0 and
+    overflow in the last bucket.  Fixed boundaries (never rescaled on
+    observe) keep histograms mergeable across snapshots and processes.
+    """
+
+    __slots__ = ("lo", "base", "n_buckets", "buckets", "count", "total",
+                 "min", "max")
+
+    def __init__(self, lo: float = 1e-6, base: float = 2.0,
+                 n_buckets: int = 40):
+        if lo <= 0 or base <= 1 or n_buckets < 2:
+            raise ValueError("need lo > 0, base > 1, n_buckets >= 2")
+        self.lo = float(lo)
+        self.base = float(base)
+        self.n_buckets = int(n_buckets)
+        self.buckets = [0] * self.n_buckets
+        self.count = 0
+        self.total = 0.0
+        self.min = math.inf
+        self.max = -math.inf
+
+    def bucket_of(self, v: float) -> int:
+        if v <= self.lo:
+            return 0
+        i = int(math.ceil(math.log(v / self.lo) / math.log(self.base)))
+        return min(max(i, 0), self.n_buckets - 1)
+
+    def bucket_le(self, i: int) -> float:
+        """Inclusive upper bound of bucket ``i`` (inf for the overflow)."""
+        if i >= self.n_buckets - 1:
+            return math.inf
+        return self.lo * self.base ** i
+
+    def observe(self, v) -> None:
+        v = float(v)
+        self.buckets[self.bucket_of(v)] += 1
+        self.count += 1
+        self.total += v
+        self.min = min(self.min, v)
+        self.max = max(self.max, v)
+
+    def snapshot(self):
+        out = {"count": self.count, "sum": self.total}
+        if self.count:
+            out["min"] = self.min
+            out["max"] = self.max
+            out["mean"] = self.total / self.count
+        # sparse: only non-empty buckets, keyed by their upper bound
+        out["buckets"] = {
+            ("inf" if math.isinf(self.bucket_le(i)) else
+             f"{self.bucket_le(i):.9g}"): n
+            for i, n in enumerate(self.buckets) if n}
+        return out
+
+
+class MetricsRegistry:
+    """Named, labeled metric store.
+
+    ``counter/gauge/histogram`` get-or-create: the same (name, labels)
+    pair always returns the same metric object, so call sites hold no
+    references and the registry stays the single source of truth.  A
+    name is one kind only — re-registering it as another kind raises.
+    """
+
+    def __init__(self):
+        # name -> (kind, {label_key -> metric})
+        self._metrics: Dict[str, Tuple[type, Dict[LabelKey, object]]] = {}
+
+    def _get(self, kind, name: str, labels: Dict[str, object], **kw):
+        ent = self._metrics.get(name)
+        if ent is None:
+            ent = (kind, {})
+            self._metrics[name] = ent
+        elif ent[0] is not kind:
+            raise ValueError(
+                f"metric {name!r} already registered as "
+                f"{ent[0].__name__}, not {kind.__name__}")
+        key = _label_key(labels)
+        m = ent[1].get(key)
+        if m is None:
+            m = kind(**kw)
+            ent[1][key] = m
+        return m
+
+    def counter(self, name: str, **labels) -> Counter:
+        return self._get(Counter, name, labels)
+
+    def gauge(self, name: str, **labels) -> Gauge:
+        return self._get(Gauge, name, labels)
+
+    def histogram(self, name: str, lo: float = 1e-6, base: float = 2.0,
+                  n_buckets: int = 40, **labels) -> Histogram:
+        return self._get(Histogram, name, labels, lo=lo, base=base,
+                         n_buckets=n_buckets)
+
+    def snapshot(self) -> Dict[str, object]:
+        """Flat JSON-friendly dict, deterministically ordered."""
+        out = {}
+        for name in sorted(self._metrics):
+            _, by_label = self._metrics[name]
+            for key in sorted(by_label):
+                out[_fmt(name, key)] = by_label[key].snapshot()
+        return out
+
+    def value(self, name: str, **labels):
+        """Current value of one metric (None when never written)."""
+        ent = self._metrics.get(name)
+        if ent is None:
+            return None
+        m = ent[1].get(_label_key(labels))
+        return None if m is None else m.snapshot()
+
+    def reset(self) -> None:
+        self._metrics.clear()

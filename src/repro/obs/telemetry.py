@@ -1,0 +1,203 @@
+"""The telemetry facade: one object the whole service stack reports into.
+
+``Telemetry`` bundles a :class:`~repro.obs.metrics.MetricsRegistry`
+(always on — counters are a few attribute ops) with an optional
+:class:`~repro.obs.tracing.SpanRecorder` (``tracing=True``), and
+``snapshot()`` renders everything as one flat JSON-friendly dict — the
+blessed replacement for ad-hoc ``BrokerStats.as_dict`` readouts in
+benchmark artifacts.
+
+``NULL`` is the near-zero-cost default: a :class:`NullTelemetry` whose
+``counter/gauge/histogram`` return shared no-op twins and whose ``span``
+is a reusable no-op context manager.  Instrumented code holds exactly
+one pattern::
+
+    tel = telemetry if telemetry is not None else NULL
+    tel.counter("broker.queries").inc()
+    with tel.span("bucket.sweep", args={...}):
+        ...
+
+so the off path costs one attribute load and one no-op call per site —
+and, because every hook is host-side Python, the compiled engines are
+bitwise-identical with telemetry on or off (``tests/test_obs.py``
+asserts the blocked engine's outputs exactly).
+"""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+from typing import Dict, Optional
+
+from .metrics import Counter, Gauge, Histogram, MetricsRegistry
+from .tracing import SpanRecorder
+
+
+class Telemetry:
+    """Live metrics registry + optional span recorder."""
+
+    def __init__(self, tracing: bool = False, clock=time.monotonic,
+                 max_events: int = 200_000):
+        self.metrics = MetricsRegistry()
+        self.tracer: Optional[SpanRecorder] = (
+            SpanRecorder(clock=clock, max_events=max_events)
+            if tracing else None)
+
+    # -------------------------------------------------------- metrics --
+    @property
+    def enabled(self) -> bool:
+        return True
+
+    @property
+    def tracing(self) -> bool:
+        return self.tracer is not None
+
+    def counter(self, name: str, **labels) -> Counter:
+        return self.metrics.counter(name, **labels)
+
+    def gauge(self, name: str, **labels) -> Gauge:
+        return self.metrics.gauge(name, **labels)
+
+    def histogram(self, name: str, **kw) -> Histogram:
+        return self.metrics.histogram(name, **kw)
+
+    # -------------------------------------------------------- tracing --
+    def span(self, name: str, cat: str = "service", tid: int = 0,
+             args: Optional[Dict] = None):
+        if self.tracer is None:
+            return _NULL_CTX
+        return self.tracer.span(name, cat=cat, tid=tid, args=args)
+
+    def add_span(self, name: str, begin: float, end: float,
+                 cat: str = "service", tid: int = 0,
+                 args: Optional[Dict] = None) -> None:
+        if self.tracer is not None:
+            self.tracer.add_span(name, begin, end, cat=cat, tid=tid,
+                                 args=args)
+
+    def instant(self, name: str, cat: str = "service", tid: int = 0,
+                args: Optional[Dict] = None) -> None:
+        if self.tracer is not None:
+            self.tracer.instant(name, cat=cat, tid=tid, args=args)
+
+    def now(self) -> Optional[float]:
+        """Tracer-clock seconds for explicit add_span bounds (None when
+        tracing is off — pair with ``add_span``, which no-ops then)."""
+        return None if self.tracer is None else self.tracer.now()
+
+    # -------------------------------------------------------- results --
+    def snapshot(self) -> Dict[str, object]:
+        """Everything the stack reported, one JSON-friendly dict."""
+        out = {"metrics": self.metrics.snapshot()}
+        if self.tracer is not None:
+            out["trace"] = {"events": len(self.tracer.events),
+                            "dropped": self.tracer.dropped}
+        return out
+
+    def export_trace(self, path) -> bool:
+        """Write the Perfetto trace JSON; False when tracing is off."""
+        if self.tracer is None:
+            return False
+        self.tracer.export(path)
+        return True
+
+    def reset(self) -> None:
+        self.metrics.reset()
+        if self.tracer is not None:
+            self.tracer.reset()
+
+
+# ---------------------------------------------------------------------------
+# The no-op default.  Shared singletons: no allocation on the off path.
+# ---------------------------------------------------------------------------
+class _NullCtx:
+    __slots__ = ()
+
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *exc):
+        return False
+
+
+_NULL_CTX = _NullCtx()
+
+
+class _NullMetric:
+    """Counter/gauge/histogram twin that absorbs every write."""
+
+    __slots__ = ()
+    value = 0
+    count = 0
+    total = 0.0
+
+    def inc(self, n=1):
+        pass
+
+    def set(self, v):
+        pass
+
+    def observe(self, v):
+        pass
+
+    def snapshot(self):
+        return 0
+
+
+_NULL_METRIC = _NullMetric()
+
+
+class NullTelemetry(Telemetry):
+    """The near-zero-cost off switch; API-compatible with Telemetry."""
+
+    def __init__(self):  # no registry, no tracer
+        pass
+
+    @property
+    def enabled(self) -> bool:
+        return False
+
+    @property
+    def tracing(self) -> bool:
+        return False
+
+    tracer = None
+    metrics = None
+
+    def counter(self, name: str, **labels):
+        return _NULL_METRIC
+
+    def gauge(self, name: str, **labels):
+        return _NULL_METRIC
+
+    def histogram(self, name: str, **kw):
+        return _NULL_METRIC
+
+    def span(self, name: str, cat: str = "service", tid: int = 0,
+             args: Optional[Dict] = None):
+        return _NULL_CTX
+
+    def add_span(self, *a, **kw):
+        pass
+
+    def instant(self, *a, **kw):
+        pass
+
+    def now(self):
+        return None
+
+    def snapshot(self) -> Dict[str, object]:
+        return {"metrics": {}}
+
+    def export_trace(self, path) -> bool:
+        return False
+
+    def reset(self) -> None:
+        pass
+
+
+NULL = NullTelemetry()
+
+
+def or_null(telemetry: Optional[Telemetry]) -> Telemetry:
+    """The one canonicalization every instrumented call site uses."""
+    return telemetry if telemetry is not None else NULL

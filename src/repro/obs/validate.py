@@ -1,0 +1,40 @@
+"""CLI trace validator: ``python -m repro.obs.validate trace.json``.
+
+Exits 0 when the file is well-formed, balanced Chrome/Perfetto
+``trace_event`` JSON (the CI telemetry smoke's gate); prints every
+problem and exits 1 otherwise.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+from .tracing import validate_trace_events
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if len(argv) != 1:
+        print("usage: python -m repro.obs.validate <trace.json>",
+              file=sys.stderr)
+        return 2
+    path = argv[0]
+    try:
+        with open(path) as fh:
+            obj = json.load(fh)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"{path}: unreadable trace: {e}", file=sys.stderr)
+        return 1
+    problems = validate_trace_events(obj)
+    if problems:
+        for p in problems:
+            print(f"{path}: {p}", file=sys.stderr)
+        return 1
+    n = len(obj["traceEvents"])
+    spans = sum(1 for e in obj["traceEvents"] if e.get("ph") == "X")
+    print(f"{path}: ok — {n} events, {spans} spans")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

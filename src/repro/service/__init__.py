@@ -19,10 +19,17 @@ concurrent* scenario traffic cheap:
     successive halving over PolicyConfig space) that exercises the broker
     the way an architecture-search harness would.
 
+Every layer reports into an optional :class:`repro.obs.Telemetry`
+(``SimBroker(telemetry=...)``): lifecycle spans, queue-wait/flush
+histograms, cache and migration counters — ``broker.snapshot()`` renders
+the lot; the default is a no-op sink and results are identical either
+way (see :mod:`repro.obs`).
+
 ``benchmarks/service_throughput.py`` measures the broker against naive
 per-query execution; ``tests/test_service.py`` pins bit-identical
 per-query results against direct sequential ``TieredMemSimulator`` runs.
 """
+from ..obs import NullTelemetry, Telemetry
 from .broker import BrokerStats, SimBroker
 from .cache import DiskCacheTier, ResultCache
 from .query import SimFuture, SimQuery, query_cache_key, spec_cache_key
@@ -31,5 +38,5 @@ from .search import grid_search, policy_grid, successive_halving
 __all__ = [
     "BrokerStats", "SimBroker", "DiskCacheTier", "ResultCache", "SimFuture",
     "SimQuery", "query_cache_key", "spec_cache_key", "grid_search",
-    "policy_grid", "successive_halving",
+    "policy_grid", "successive_halving", "Telemetry", "NullTelemetry",
 ]

@@ -44,9 +44,10 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from ..core.sweep import compile_count as sweep_compile_count
 from ..core.sweep import sweep_lanes
-from ..core.config import MachineConfig
+from ..core.config import MIG_POLICY_NAMES, MachineConfig
 from ..core.sim import RunResult, Trace, pow2ceil as _pow2ceil
 from ..core.workloads import TraceSpec
+from ..obs import or_null
 from .cache import ResultCache
 from .query import SimFuture, SimQuery, query_cache_key, spec_cache_key
 
@@ -61,23 +62,46 @@ class BrokerStats:
     pad_lanes: int = 0         # power-of-two padding lanes (discarded)
     compiles: int = 0          # XLA compiles observed across flushes
 
-    def as_dict(self) -> Dict[str, int]:
-        return dataclasses.asdict(self)
+    @property
+    def pad_ratio(self) -> float:
+        """Discarded padding lanes as a fraction of all executed lanes —
+        the padding overhead of pow2 lane quantization."""
+        run = self.lanes_run + self.pad_lanes
+        return self.pad_lanes / run if run else 0.0
+
+    def as_dict(self) -> Dict[str, float]:
+        out = dataclasses.asdict(self)
+        out["pad_ratio"] = self.pad_ratio
+        return out
+
+    def reset(self) -> None:
+        """Zero every counter (measurement-window bookends in benchmarks
+        and long-lived services)."""
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, f.default)
+
+
+def _bucket_label(bkey: Tuple) -> str:
+    """Compact, label-safe bucket identity for metrics/spans (the full
+    bucket key embeds a MachineConfig repr)."""
+    mc, phase_b, engine, n_steps, period = bkey
+    return f"{engine}/{phase_b}/t{mc.n_threads}/s{n_steps}/p{period}"
 
 
 class _Pending:
     """One future lane: a distinct (machine, engine, cost, policy, trace)
     simulation plus every future waiting on it."""
 
-    __slots__ = ("key", "trace", "query", "futures", "enqueue_t")
+    __slots__ = ("key", "trace", "query", "futures", "enqueue_t", "admit_t")
 
     def __init__(self, key, trace: Trace, query: SimQuery,
-                 enqueue_t: float):
+                 enqueue_t: float, admit_t: Optional[float] = None):
         self.key = key
         self.trace = trace
         self.query = query          # representative (first) query
         self.futures: List[SimFuture] = []
         self.enqueue_t = enqueue_t
+        self.admit_t = admit_t      # tracer clock (None unless tracing)
 
     @property
     def priority(self) -> int:
@@ -103,11 +127,21 @@ class SimBroker:
                    to (raw ``Trace`` queries are never reshaped — the
                    caller owns their shape and bucket).
     cache / clock  injectable for sizing and for deterministic tests.
+    telemetry      optional :class:`repro.obs.Telemetry`: per-query
+                   lifecycle spans (admit → queue → flush → sweep →
+                   resolve), queue-wait and flush-latency histograms,
+                   per-bucket compile counters, cache and per-policy-
+                   family migration counters.  Defaults to the no-op
+                   sink; every hook is host-side, so compiled programs
+                   and results are identical either way.  Note spans use
+                   the telemetry clock, while queue-wait *metrics* use
+                   the broker's injectable scheduling ``clock``.
     """
 
     def __init__(self, max_lanes: int = 64, max_wait: float = 0.25,
                  lane_sharding=None, pad_steps_floor: int = 64,
-                 cache: Optional[ResultCache] = None, clock=time.monotonic):
+                 cache: Optional[ResultCache] = None, clock=time.monotonic,
+                 telemetry=None):
         if max_lanes < 1:
             raise ValueError("max_lanes must be >= 1")
         self.max_lanes = max_lanes
@@ -116,6 +150,9 @@ class SimBroker:
         self.pad_steps_floor = pad_steps_floor
         self.cache = cache if cache is not None else ResultCache()
         self.clock = clock
+        self.telemetry = or_null(telemetry)
+        if telemetry is not None and hasattr(self.cache, "attach_telemetry"):
+            self.cache.attach_telemetry(self.telemetry)
         self.stats = BrokerStats()
         # bucket key -> (cache key -> pending lane), insertion-ordered
         self._buckets: Dict[Tuple, Dict[Tuple, _Pending]] = {}
@@ -148,7 +185,10 @@ class SimBroker:
         return (mc, q.phase_b, q.engine, canonical.n_steps, period)
 
     def submit(self, q: SimQuery) -> SimFuture:
+        tel = self.telemetry
         self.stats.queries += 1
+        tel.counter("broker.queries").inc()
+        admit_t0 = tel.now()
         fut = SimFuture(q, self)
         if isinstance(q.trace, TraceSpec):
             # recipe-addressed: a hit skips trace generation entirely
@@ -160,7 +200,11 @@ class SimBroker:
         hit = self.cache.get(key)
         if hit is not None:
             self.stats.cache_hits += 1
+            tel.counter("broker.cache_hits").inc()
             fut._resolve(hit, from_cache=True)
+            if admit_t0 is not None:
+                tel.add_span("query.admit", admit_t0, tel.now(),
+                             args={"cache_hit": True})
             return fut
 
         if canonical is None:
@@ -169,12 +213,18 @@ class SimBroker:
         bucket = self._buckets.setdefault(bkey, {})
         pend = bucket.get(key)
         if pend is None:
-            pend = _Pending(key, canonical, q, self.clock())
+            pend = _Pending(key, canonical, q, self.clock(),
+                            admit_t=tel.now())
             bucket[key] = pend
         else:
             self.stats.inflight_joins += 1
+            tel.counter("broker.inflight_joins").inc()
         pend.futures.append(fut)
         self._fut_index[id(fut)] = (bkey, key)
+        if admit_t0 is not None:
+            tel.add_span("query.admit", admit_t0, tel.now(),
+                         args={"cache_hit": False,
+                               "bucket": _bucket_label(bkey)})
 
         if len(bucket) >= self.max_lanes:
             self._flush(bkey)
@@ -246,6 +296,10 @@ class SimBroker:
         if not bucket:
             self._buckets.pop(bkey, None)
             return
+        tel = self.telemetry
+        blabel = _bucket_label(bkey) if tel.enabled else ""
+        flush_t0 = tel.now()
+        now = self.clock()
         pendings = sorted(
             bucket.values(),
             key=lambda p: (-p.priority, p.deadline, p.enqueue_t))
@@ -254,6 +308,15 @@ class SimBroker:
             del bucket[p.key]
         if not bucket:
             del self._buckets[bkey]
+        if tel.enabled:
+            qwait = tel.histogram("broker.queue_wait_seconds")
+            for p in batch:
+                # broker scheduling clock, matching max_wait semantics
+                qwait.observe(max(now - p.enqueue_t, 0.0))
+                if p.admit_t is not None and flush_t0 is not None:
+                    tel.add_span("query.queue", p.admit_t, flush_t0,
+                                 args={"bucket": blabel,
+                                       "waiters": len(p.futures)})
 
         mc, phase_b, engine, _, _ = bkey
         qbudget = _pow2ceil(min(
@@ -281,6 +344,7 @@ class SimBroker:
             trs.append(batch[0].trace)
 
         before = sweep_compile_count()
+        wall_t0 = time.perf_counter()
         try:
             results = sweep_lanes(
                 mc, ccs, pcs, trs, phase_b=phase_b, budget=qbudget,
@@ -288,7 +352,8 @@ class SimBroker:
                 group=qgroup,
                 # queries on a reference path already carried debug=True
                 # (SimQuery validates); the bucket inherits it
-                debug=(engine != "blocked" or phase_b != "batched"))
+                debug=(engine != "blocked" or phase_b != "batched"),
+                telemetry=tel)
         except Exception as exc:
             # a poisoned microbatch must not strand its futures: fail the
             # whole batch (waiters raise instead of spinning) and let the
@@ -297,14 +362,67 @@ class SimBroker:
                 for f in p.futures:
                     self._fut_index.pop(id(f), None)
                     f._fail(exc)
+            tel.counter("broker.flush_failures").inc()
             raise
-        self.stats.compiles += sweep_compile_count() - before
+        compiles = sweep_compile_count() - before
+        self.stats.compiles += compiles
         self.stats.flushes += 1
         self.stats.lanes_run += len(batch)
         self.stats.pad_lanes += n_pad
+        if tel.enabled:
+            tel.counter("broker.flushes", bucket=blabel).inc()
+            tel.counter("broker.compiles", bucket=blabel).inc(compiles)
+            tel.counter("broker.lanes_run", bucket=blabel).inc(len(batch))
+            tel.counter("broker.pad_lanes", bucket=blabel).inc(n_pad)
+            tel.histogram("broker.flush_seconds").observe(
+                time.perf_counter() - wall_t0)
+            tel.gauge("broker.pending_lanes").set(self.pending_lanes())
 
+        resolve_t0 = tel.now()
         for p, res in zip(batch, results):
             self.cache.put(p.key, res)
             for f in p.futures:
                 self._fut_index.pop(id(f), None)
                 f._resolve(res)
+        if tel.enabled:
+            self._record_summaries(batch, results)
+            if flush_t0 is not None:
+                t1 = tel.now()
+                tel.add_span("query.resolve", resolve_t0, t1,
+                             args={"bucket": blabel, "lanes": len(batch)})
+                tel.add_span("bucket.flush", flush_t0, t1,
+                             args={"bucket": blabel, "lanes": len(batch),
+                                   "pad_lanes": n_pad,
+                                   "compiles": compiles})
+
+    def _record_summaries(self, batch: Sequence[_Pending],
+                          results: Sequence[RunResult]) -> None:
+        """Lift per-policy-family migration totals and per-tier page
+        placement out of each lane's ``RunResult.summary()`` into the
+        metrics registry (telemetry-on only: summary() walks host state)."""
+        tel = self.telemetry
+        for p, res in zip(batch, results):
+            s = res.summary()
+            fam = MIG_POLICY_NAMES.get(int(p.query.policy.mig_policy),
+                                       "unknown")
+            tel.counter("sim.promotions", family=fam).inc(
+                int(s["data_migrations"]))
+            tel.counter("sim.demotions", family=fam).inc(
+                int(s["demotions"]))
+            tel.counter("sim.nomad_aborts", family=fam).inc(
+                int(s["nomad_retries"]) + int(s["nomad_shadow_drops"]))
+            for t, n in enumerate(s["data_pages_per_tier"]):
+                tel.counter("sim.data_pages", tier=t).inc(int(n))
+            for t, n in enumerate(s["leaf_pages_per_tier"]):
+                tel.counter("sim.leaf_pages", tier=t).inc(int(n))
+
+    def snapshot(self) -> Dict[str, object]:
+        """One JSON-friendly dict of everything observable: broker stats,
+        cache stats (both tiers) and the telemetry snapshot.  The blessed
+        artifact payload — replaces ad-hoc ``stats.as_dict()`` readouts."""
+        out = {"broker": self.stats.as_dict(),
+               "pending_lanes": self.pending_lanes()}
+        if hasattr(self.cache, "stats"):
+            out["cache"] = self.cache.stats()
+        out["telemetry"] = self.telemetry.snapshot()
+        return out

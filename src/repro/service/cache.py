@@ -30,6 +30,7 @@ from pathlib import Path
 from typing import Optional, Tuple
 
 from ..core.sim import RunResult
+from ..obs import or_null
 
 _DISK_FORMAT = 1
 
@@ -40,14 +41,24 @@ class DiskCacheTier:
     Not safe against concurrent writers of the *same* entry beyond
     last-write-wins (writes go through a temp file + atomic rename), which
     matches the cache contract: identical keys hold identical results.
+
+    Every operation is accounted: ``hits``/``misses`` (gets),
+    ``flushes`` (entries written to disk) and ``evictions`` (entries
+    unlinked by the byte cap) — without them spill effectiveness is
+    unmeasurable.  ``stats()`` exposes the lot; an attached
+    :class:`~repro.obs.Telemetry` mirrors each count into the metrics
+    registry under ``cache.disk.*``.
     """
 
-    def __init__(self, path, max_bytes: int = 1 << 30):
+    def __init__(self, path, max_bytes: int = 1 << 30, telemetry=None):
         self.path = Path(path)
         self.path.mkdir(parents=True, exist_ok=True)
         self.max_bytes = int(max_bytes)
+        self.telemetry = or_null(telemetry)
         self.hits = 0
         self.misses = 0
+        self.flushes = 0       # entries written (spilled) to disk
+        self.evictions = 0     # entries unlinked by the byte cap
         # Running byte estimate so put() doesn't rescan the directory
         # every time: None = unknown (first put resyncs via _evict);
         # overwrites over-count, which only triggers an early resync.
@@ -68,12 +79,14 @@ class DiskCacheTier:
         except (OSError, ValueError, pickle.UnpicklingError, EOFError,
                 AttributeError, ImportError):
             self.misses += 1
+            self.telemetry.counter("cache.disk.misses").inc()
             return None
         try:
             os.utime(f)                      # refresh LRU position
         except OSError:
             pass          # read-only spill dir: the hit still counts
         self.hits += 1
+        self.telemetry.counter("cache.disk.hits").inc()
         return payload["value"]
 
     def put(self, key: Tuple, value: RunResult) -> None:
@@ -92,6 +105,8 @@ class DiskCacheTier:
             except OSError:
                 pass
             return
+        self.flushes += 1
+        self.telemetry.counter("cache.disk.flushes").inc()
         if self._approx_bytes is not None:
             self._approx_bytes += len(blob)
         if self._approx_bytes is None or self._approx_bytes > self.max_bytes:
@@ -111,10 +126,17 @@ class DiskCacheTier:
                 break
             try:
                 f.unlink()
+                self.evictions += 1
+                self.telemetry.counter("cache.disk.evictions").inc()
             except OSError:
                 pass          # already gone elsewhere; still over-counted
             total -= size
         self._approx_bytes = total
+
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "flushes": self.flushes, "evictions": self.evictions,
+                "entries": sum(1 for _ in self.path.glob("*.pkl"))}
 
     def clear(self) -> None:
         for f in self.path.glob("*.pkl"):
@@ -133,14 +155,24 @@ class ResultCache:
     """
 
     def __init__(self, max_entries: int = 512, spill_dir=None,
-                 disk_max_bytes: int = 1 << 30):
+                 disk_max_bytes: int = 1 << 30, telemetry=None):
         self._data: "collections.OrderedDict[Tuple, RunResult]" = \
             collections.OrderedDict()
         self.max_entries = max_entries
-        self.disk = (DiskCacheTier(spill_dir, disk_max_bytes)
+        self.telemetry = or_null(telemetry)
+        self.disk = (DiskCacheTier(spill_dir, disk_max_bytes,
+                                   telemetry=self.telemetry)
                      if spill_dir is not None else None)
         self.hits = 0
         self.misses = 0
+        self.evictions = 0     # entries dropped from the in-memory LRU
+
+    def attach_telemetry(self, telemetry) -> None:
+        """Late-bind a telemetry sink (the broker owns the Telemetry but
+        callers may hand it a pre-built cache)."""
+        self.telemetry = or_null(telemetry)
+        if self.disk is not None:
+            self.disk.telemetry = self.telemetry
 
     def __len__(self) -> int:
         return len(self._data)
@@ -154,9 +186,11 @@ class ResultCache:
                 self._trim()
         if hit is None:
             self.misses += 1
+            self.telemetry.counter("cache.mem.misses").inc()
             return None
         self._data.move_to_end(key)
         self.hits += 1
+        self.telemetry.counter("cache.mem.hits").inc()
         return hit
 
     def put(self, key: Tuple, value: RunResult) -> None:
@@ -169,6 +203,15 @@ class ResultCache:
     def _trim(self) -> None:
         while len(self._data) > self.max_entries:
             self._data.popitem(last=False)
+            self.evictions += 1
+            self.telemetry.counter("cache.mem.evictions").inc()
+
+    def stats(self) -> dict:
+        out = {"hits": self.hits, "misses": self.misses,
+               "evictions": self.evictions, "entries": len(self._data)}
+        if self.disk is not None:
+            out["disk"] = self.disk.stats()
+        return out
 
     def clear(self) -> None:
         self._data.clear()

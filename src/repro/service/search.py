@@ -59,9 +59,13 @@ def grid_search(broker: SimBroker, mc: MachineConfig,
     """Score every policy on one trace; return (policy, objective) sorted
     ascending (lower is better — objectives are cycle/event counts)."""
     cc = cc if cc is not None else CostConfig()
+    tel = broker.telemetry
     queries = [SimQuery(trace=trace, policy=pc, cost=cc, machine=mc)
                for pc in policies]
-    results = broker.run(queries)
+    with tel.span("search.grid", args={"candidates": len(queries),
+                                       "objective": objective}):
+        results = broker.run(queries)
+    tel.counter("search.evaluations").inc(len(queries))
     scored = [(pc, float(res.summary()[objective]))
               for pc, res in zip(policies, results)]
     scored.sort(key=lambda t: t[1])
@@ -88,12 +92,17 @@ def successive_halving(broker: SimBroker, mc: MachineConfig,
     if not cands:
         raise ValueError("successive_halving needs at least one candidate")
     cc = cc if cc is not None else CostConfig()
+    tel = broker.telemetry
     history = []
     for r in range(rungs):
         rung_spec = dataclasses.replace(
             spec, run_steps=spec.run_steps * eta ** r)
-        scored = grid_search(broker, mc, rung_spec, cands, cc=cc,
-                             objective=objective)
+        with tel.span("search.rung",
+                      args={"rung": r, "run_steps": rung_spec.run_steps,
+                            "candidates": len(cands)}):
+            scored = grid_search(broker, mc, rung_spec, cands, cc=cc,
+                                 objective=objective)
+        tel.counter("search.rungs").inc()
         history.append({
             "rung": r, "run_steps": rung_spec.run_steps,
             "scores": [(pc.label(), s) for pc, s in scored],

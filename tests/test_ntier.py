@@ -452,3 +452,44 @@ def test_reference_paths_require_debug_flag():
                              phase_b="sequential", debug=True).run(tr)
     prod = TieredMemSimulator(mc=mc, pc=pc).run(tr)
     assert_results_bitwise(prod, ref, "debug reference")
+
+
+# ---------------------------------------------------------------------------
+# 6. Per-tier summary fields pinned on 3- and 4-tier machines (oracle)
+# ---------------------------------------------------------------------------
+
+def test_per_tier_summary_fields_pinned_on_3_and_4_tier():
+    """``RunResult.summary``'s per-tier placement lists, pinned on
+    genuinely 3- and 4-tier machines: length == tier count, tier 0
+    reconciles with the scalar dram fields and tiers 1+ with the scalar
+    nvmm fields, pressure actually spreads pages past the fast tier, and
+    every entry equals the pure-Python oracle's."""
+    cases = [
+        ((300, 600, 2400),
+         tpp(demote_wm=0.05, autonuma_period=16, autonuma_budget=32), 70),
+        ((300, 600, 1200, 4800),
+         nomad(autonuma_period=16, autonuma_budget=32), 71),
+    ]
+    cc = CostConfig()
+    for tiers, pc, seed in cases:
+        mc = tiny_machine(tiers=tiers, va_pages=1 << 11)
+        tr = random_trace(mc, steps=256, seed=seed, write_p=0.5)
+        res = TieredMemSimulator(mc=mc, cc=cc, pc=pc).run(tr)
+        s = res.summary()
+        nt = len(tiers)
+        assert len(s["data_pages_per_tier"]) == nt, tiers
+        assert len(s["leaf_pages_per_tier"]) == nt, tiers
+        # the legacy 2-tier scalars remain the fast/slower split
+        assert s["data_pages_per_tier"][0] == s["data_pages_dram"]
+        assert sum(s["data_pages_per_tier"][1:]) == s["data_pages_nvmm"]
+        assert s["leaf_pages_per_tier"][0] == s["leaf_pages_dram"]
+        assert sum(s["leaf_pages_per_tier"][1:]) == s["leaf_pages_nvmm"]
+        assert sum(s["data_pages_per_tier"][1:]) > 0, \
+            f"{tiers}: pressure never engaged the slower tiers"
+
+        oracle = OracleSim(mc, cc, pc)
+        oracle.run(tr)
+        ref = oracle.summary()
+        assert s["data_pages_per_tier"] == ref["data_pages_per_tier"], tiers
+        assert s["leaf_pages_per_tier"] == ref["leaf_pages_per_tier"], tiers
+        assert_matches_oracle(res, mc, cc, pc, tr)

@@ -361,6 +361,32 @@ def test_result_cache_lru_bound():
     c.put(("c",), 3)                 # evicts ("b",), the LRU entry
     assert c.get(("b",)) is None and len(c) == 2
     assert c.hits == 1 and c.misses == 1
+    assert c.evictions == 1
+    assert c.stats() == {"hits": 1, "misses": 1, "evictions": 1,
+                         "entries": 2}
+
+
+def test_broker_stats_reset_and_pad_ratio(stub_exec):
+    """Satellite: pad_lanes is reported as a ratio alongside the raw
+    count, and reset() zeroes the whole window."""
+    mc = tiny_machine()
+    broker = SimBroker(max_lanes=64, max_wait=1e9)
+    tr = random_trace(mc, seed=21)
+    futs = [broker.submit(SimQuery(trace=tr, policy=pc, machine=mc))
+            for pc in MIXED_POLICIES]            # 3 lanes -> pads to 4
+    futs[0].result()
+    assert broker.stats.lanes_run == 3 and broker.stats.pad_lanes == 1
+    assert broker.stats.pad_ratio == 0.25
+    d = broker.stats.as_dict()
+    assert d["pad_lanes"] == 1 and d["pad_ratio"] == 0.25
+
+    broker.stats.reset()
+    zeroed = broker.stats.as_dict()
+    assert all(v == 0 for v in zeroed.values()), zeroed
+    assert broker.stats.pad_ratio == 0.0         # no div-by-zero
+    # the broker keeps working across the measurement-window bookend
+    broker.run([SimQuery(trace=tr, policy=MIXED_POLICIES[0], machine=mc)])
+    assert broker.stats.queries == 1
 
 
 def test_disk_cache_tier_roundtrip_and_byte_cap(tmp_path):
@@ -387,6 +413,34 @@ def test_disk_cache_tier_roundtrip_and_byte_cap(tmp_path):
         "oldest-mtime entries evicted first"
     assert sum(f.stat().st_size
                for f in (tmp_path / "s").glob("*.pkl")) <= 6000
+
+
+def test_disk_cache_eviction_accounting(tmp_path):
+    """Satellite: the disk tier accounts every operation — flush counts
+    written entries, eviction counts unlinked ones, and the counters
+    reconcile with what is actually on disk."""
+    from repro.service import DiskCacheTier
+    tier = DiskCacheTier(tmp_path / "d", max_bytes=6000)
+    for i in range(4):
+        tier.put((i,), np.zeros(500))            # ~4KB pickled each
+        os.utime(tier._file((i,)), (i + 1, i + 1))
+    tier._evict()
+    assert tier.flushes == 4
+    on_disk = sum(1 for _ in (tmp_path / "d").glob("*.pkl"))
+    assert tier.evictions == 4 - on_disk > 0
+    stats = tier.stats()
+    assert stats["flushes"] == 4
+    assert stats["evictions"] == tier.evictions
+    assert stats["entries"] == on_disk
+    # gets keep reconciling after eviction
+    tier.get((0,))                               # oldest: evicted -> miss
+    tier.get((3,))                               # newest: survived -> hit
+    assert tier.stats()["misses"] == 1 and tier.stats()["hits"] == 1
+
+    # an oversized blob is refused, not flushed
+    tiny = DiskCacheTier(tmp_path / "t", max_bytes=100)
+    tiny.put(("big",), np.zeros(500))
+    assert tiny.flushes == 0 and tiny.stats()["entries"] == 0
 
 
 def test_disk_spilled_cache_serves_fresh_process_with_zero_device_work(
