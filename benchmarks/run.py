@@ -39,6 +39,9 @@ FIGURES = {
                         "workload matrix through the broker"),
     "service_throughput": ("service_throughput",
                            "query-broker throughput vs naive execution"),
+    "service_chaos": ("service_throughput:chaos_main",
+                      "broker under a 1% injected device-fault rate; "
+                      "gates on zero stranded futures"),
 }
 
 
@@ -94,7 +97,13 @@ def main() -> None:
             print(f"# telemetry[{name}] "
                   f"{json.dumps(snap, sort_keys=True, default=float)}",
                   flush=True)
+    ok = len(names) - len(failures)
+    print(f"# summary: {ok}/{len(names)} drivers ok"
+          + (f"; FAILED: {', '.join(failures)}" if failures else ""),
+          flush=True)
     if failures:
+        print(f"benchmark drivers failed: {', '.join(failures)}",
+              file=sys.stderr, flush=True)
         sys.exit(1)
 
 

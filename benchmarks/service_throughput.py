@@ -18,6 +18,15 @@ Measured (warm, steady-state) on the benchmark machine and tracked in
 
 Quick mode is the CI smoke: a small bucket of 2 lanes, artifact only (no
 bar — CI runners are too noisy for a throughput gate).
+
+``chaos_main`` (CLI: ``--chaos``) is the resilience variant: the same
+burst traffic under a seeded fault plan — one guaranteed transient
+device failure plus a 1% background failure rate on ``sweep.device`` —
+through a retrying broker.  It gates on *zero stranded futures* (every
+future resolves or fails with a typed ServiceError), on the broker
+ending non-degraded, and on the retry path actually having fired;
+results land in ``artifacts/bench/chaos.json`` (committed — CI diffs
+the gate fields).
 """
 from __future__ import annotations
 
@@ -28,7 +37,8 @@ from repro.core import (CostConfig, MachineConfig, PolicyConfig,
                         TieredMemSimulator, TraceSpec, sweep_compile_count,
                         FIRST_TOUCH, INTERLEAVE, PT_BIND_ALL, PT_BIND_HIGH,
                         PT_FOLLOW_DATA)
-from repro.service import SimBroker, SimQuery
+from repro.obs.inject import FaultInjector, fail_once, fail_rate
+from repro.service import ResilienceConfig, ServiceError, SimBroker, SimQuery
 
 SERVICE_WORKLOADS = ("memcached", "xsbench", "btree", "bfs")
 
@@ -44,12 +54,13 @@ def service_machine() -> MachineConfig:
 
 
 def burst_queries(mc: MachineConfig, n_specs: int, policies,
-                  footprint: int = 64, run_steps: int = 80):
+                  footprint: int = 64, run_steps: int = 80,
+                  seed0: int = 100):
     """n_specs workload scenarios x len(policies) bundles, all landing in
     one shape bucket (specs pad to a shared power-of-two step count)."""
     specs = [TraceSpec(workload=SERVICE_WORKLOADS[i % len(SERVICE_WORKLOADS)],
                        footprint=footprint, run_steps=run_steps,
-                       seed=100 + i)
+                       seed=seed0 + i)
              for i in range(n_specs)]
     return [SimQuery(trace=spec, policy=pc, machine=mc)
             for spec in specs for pc in policies]
@@ -161,5 +172,79 @@ def main(quick: bool = False):
     return results
 
 
+def chaos_main(quick: bool = False):
+    """Chaos mode: burst traffic under a seeded 1% device-fault rate.
+
+    The gates are liveness, not speed: every future terminates (result
+    or typed error), nothing is stranded or leaked, the broker ends
+    non-degraded, and the bounded-retry path demonstrably fired.
+    """
+    mc = service_machine()
+    policies = four_policies()
+    n_bursts = 2 if quick else 6
+    tel = common.telemetry()
+    injector = FaultInjector([
+        fail_once("sweep.device"),                  # guaranteed hiccup
+        fail_rate("sweep.device", 0.01, seed=42),   # 1% background rate
+    ])
+    broker = SimBroker(
+        max_lanes=4 if quick else 64, lane_sharding="auto", telemetry=tel,
+        injector=injector,
+        resilience=ResilienceConfig(max_retries=3, backoff_base=0.005))
+
+    t0 = time.time()
+    futs = []
+    for b in range(n_bursts):           # fresh trace content every burst
+        if quick:
+            futs += broker.submit_many(burst_queries(
+                mc, 2, policies[:2], run_steps=56, seed0=1000 * (b + 1)))
+        else:
+            futs += broker.submit_many(burst_queries(
+                mc, 16, policies, seed0=1000 * (b + 1)))
+        broker.drain()
+    secs = time.time() - t0
+    n = len(futs)
+
+    stranded = [f for f in futs if not f.done()]
+    assert not stranded, f"{len(stranded)} stranded futures under chaos"
+    failed: dict = {}
+    resolved = 0
+    for f in futs:
+        try:
+            f.result()
+            resolved += 1
+        except ServiceError as e:       # typed failure: the contract
+            failed[type(e).__name__] = failed.get(type(e).__name__, 0) + 1
+    assert broker.pending_lanes() == 0 and not broker._fut_index, \
+        "broker leaked pending state after drain"
+    assert not broker.degraded_buckets(), \
+        "broker still degraded after fault-free drain"
+    assert broker.stats.retries >= 1, \
+        "fault plan never exercised the retry path"
+
+    results = {
+        "n_queries": n, "bursts": n_bursts, "seconds": secs,
+        "qps": n / secs,
+        "gates": {"stranded": len(stranded), "resolved": resolved,
+                  "typed_failures": failed,
+                  "degraded_buckets": broker.degraded_buckets(),
+                  "retries": broker.stats.retries},
+        "faults": injector.stats(),
+        "snapshot": broker.snapshot(),
+    }
+    common.emit([(f"service_chaos/{n}q", secs,
+                  f"qps={n / secs:.1f};retries={broker.stats.retries};"
+                  f"injected={results['faults']['total_injected']};"
+                  f"stranded=0")])
+    common.save_artifact("chaos", results)
+    return results
+
+
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run the fault-injection variant (chaos.json)")
+    args = ap.parse_args()
+    (chaos_main if args.chaos else main)(quick=args.quick)

@@ -15,7 +15,15 @@ Three layers:
 
 ``python -m repro.obs.validate trace.json`` checks an exported trace is
 well-formed, balanced ``trace_event`` JSON (the CI telemetry smoke).
+
+A fourth layer rides alongside: :mod:`repro.obs.inject`, a deterministic
+fault-injection harness (named sites, seeded schedule-reproducible
+failure plans) that the service layer's resilience machinery is chaos-
+tested against.  Like telemetry, its default is a no-op singleton.
 """
+from .inject import (FaultInjector, FaultRule, InjectedFault, NULL_INJECTOR,
+                     NullInjector, fail_lane, fail_n, fail_once, fail_rate,
+                     or_null_injector)
 from .metrics import Counter, Gauge, Histogram, MetricsRegistry
 from .telemetry import NULL, NullTelemetry, Telemetry, or_null
 from .tracing import SpanRecorder, validate_trace_events
@@ -24,4 +32,7 @@ __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry",
     "NULL", "NullTelemetry", "Telemetry", "or_null",
     "SpanRecorder", "validate_trace_events",
+    "FaultInjector", "FaultRule", "InjectedFault", "NULL_INJECTOR",
+    "NullInjector", "fail_lane", "fail_n", "fail_once", "fail_rate",
+    "or_null_injector",
 ]

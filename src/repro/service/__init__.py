@@ -28,15 +28,33 @@ way (see :mod:`repro.obs`).
 ``benchmarks/service_throughput.py`` measures the broker against naive
 per-query execution; ``tests/test_service.py`` pins bit-identical
 per-query results against direct sequential ``TieredMemSimulator`` runs.
+
+The failure model lives in :mod:`repro.service.resilience` (typed error
+taxonomy, TTL quarantine, per-bucket circuit breaker, retry/backoff and
+admission-control knobs) and is chaos-tested through the deterministic
+fault-injection harness in :mod:`repro.obs.inject` — see the README's
+"Robustness" section for the taxonomy and degraded-mode semantics.
 """
-from ..obs import NullTelemetry, Telemetry
+from ..obs import FaultInjector, FaultRule, InjectedFault, NullTelemetry, \
+    Telemetry, fail_lane, fail_n, fail_once, fail_rate
 from .broker import BrokerStats, SimBroker
 from .cache import DiskCacheTier, ResultCache
-from .query import SimFuture, SimQuery, query_cache_key, spec_cache_key
+from .query import (SimFuture, SimQuery, lane_digest, query_cache_key,
+                    spec_cache_key)
+from .resilience import (BrokerOverloadedError, BrokerTimeoutError,
+                         CircuitBreaker, DeadlineExceededError,
+                         PoisonedQueryError, Quarantine, ResilienceConfig,
+                         ServiceError)
 from .search import grid_search, policy_grid, successive_halving
 
 __all__ = [
     "BrokerStats", "SimBroker", "DiskCacheTier", "ResultCache", "SimFuture",
-    "SimQuery", "query_cache_key", "spec_cache_key", "grid_search",
-    "policy_grid", "successive_halving", "Telemetry", "NullTelemetry",
+    "SimQuery", "lane_digest", "query_cache_key", "spec_cache_key",
+    "grid_search", "policy_grid", "successive_halving",
+    "Telemetry", "NullTelemetry",
+    "ServiceError", "PoisonedQueryError", "DeadlineExceededError",
+    "BrokerOverloadedError", "BrokerTimeoutError",
+    "ResilienceConfig", "Quarantine", "CircuitBreaker",
+    "FaultInjector", "FaultRule", "InjectedFault",
+    "fail_once", "fail_n", "fail_lane", "fail_rate",
 ]

@@ -6,8 +6,11 @@ small number of batched ``sweep_lanes`` device programs:
   admission   ``submit()`` canonicalizes the query's trace (specs build
               once and idle-pad to a power-of-two step count), computes
               its content-addressed cache key, answers repeats from the
-              result cache (zero recompiles, zero device work), joins
-              duplicates already in flight onto one lane, and otherwise
+              result cache (zero recompiles, zero device work), fails
+              quarantined (known-poisoned) digests fast, joins
+              duplicates already in flight onto one lane, enforces the
+              ``max_pending_lanes`` admission cap (lowest-priority work
+              is rejected with ``BrokerOverloadedError``), and otherwise
               enqueues the query in its *bucket*.
   bucketing   a bucket is everything that can share one compiled
               executable: (machine, fault engine, trace step count,
@@ -30,6 +33,35 @@ small number of batched ``sweep_lanes`` device programs:
               (``lane_sharding="auto"``) — then every future resolves
               and every result enters the cache.
 
+Failure model (see :mod:`repro.service.resilience` for the taxonomy and
+:mod:`repro.obs.inject` for the chaos harness that drives it):
+
+  shedding    queries whose deadline already expired at flush time fail
+              with ``DeadlineExceededError`` instead of being silently
+              computed; fully-shed lanes never reach the device.
+  retry       a failed batch execution is retried up to
+              ``resilience.max_retries`` times with exponential backoff
+              while the error looks transient (injected faults carry an
+              explicit flag; real device errors are treated as
+              retryable).
+  bisection   a persistent batch failure is isolated by bisection: each
+              half re-runs as a normal ``sweep_lanes`` call (pow2 lane
+              padding keeps compile-key quantization intact), recursing
+              into failing halves until the poisoned lane(s) stand
+              alone.  Innocent lanes resolve normally; the guilty fail
+              with ``PoisonedQueryError`` and their digest enters a
+              TTL'd quarantine so resubmits fail fast.
+  breaker     ``resilience.breaker_threshold`` consecutive failed
+              flushes trip the bucket into *degraded mode* — per-lane
+              ``debug=True`` execution, slow but isolating — flipping
+              the ``broker.degraded`` gauge; ``breaker_recovery``
+              consecutive clean degraded flushes close the breaker.
+  liveness    ``pump()``/``drain()`` never propagate a flush failure:
+              exceptions route to the affected futures and telemetry,
+              other buckets keep flushing, and per-bucket attempt bounds
+              guarantee termination even if ``_flush`` itself misbehaves
+              (stranded futures are failed, never leaked).
+
 The broker is synchronous and in-process: nothing runs until a bucket
 fills, comes due inside ``pump()``/``drain()``, or a future is forced.
 That keeps it deterministic (the test suite pins per-query results
@@ -48,8 +80,13 @@ from ..core.config import MIG_POLICY_NAMES, MachineConfig
 from ..core.sim import RunResult, Trace, pow2ceil as _pow2ceil
 from ..core.workloads import TraceSpec
 from ..obs import or_null
+from ..obs.inject import or_null_injector
 from .cache import ResultCache
-from .query import SimFuture, SimQuery, query_cache_key, spec_cache_key
+from .query import (SimFuture, SimQuery, lane_digest, query_cache_key,
+                    spec_cache_key)
+from .resilience import (BrokerOverloadedError, CircuitBreaker,
+                         DeadlineExceededError, PoisonedQueryError,
+                         Quarantine, ResilienceConfig)
 
 
 @dataclasses.dataclass
@@ -61,6 +98,10 @@ class BrokerStats:
     lanes_run: int = 0         # distinct query lanes executed
     pad_lanes: int = 0         # power-of-two padding lanes (discarded)
     compiles: int = 0          # XLA compiles observed across flushes
+    retries: int = 0           # transient-failure batch re-executions
+    shed: int = 0              # futures failed with DeadlineExceededError
+    quarantined: int = 0       # lanes poisoned and deny-listed
+    rejected: int = 0          # futures failed by the admission cap
 
     @property
     def pad_ratio(self) -> float:
@@ -136,12 +177,21 @@ class SimBroker:
                    and results are identical either way.  Note spans use
                    the telemetry clock, while queue-wait *metrics* use
                    the broker's injectable scheduling ``clock``.
+    resilience     :class:`~repro.service.resilience.ResilienceConfig`
+                   (retry/backoff, breaker, quarantine TTL, admission
+                   cap, deadline grace).  Defaults are production-sane.
+    injector       optional :class:`~repro.obs.inject.FaultInjector`;
+                   armed over the ``broker.flush`` / ``sweep.device``
+                   sites here and propagated to the cache's disk sites.
+                   Defaults to the no-op injector.
+    sleep          injectable backoff sleep (tests pass a recorder).
     """
 
     def __init__(self, max_lanes: int = 64, max_wait: float = 0.25,
                  lane_sharding=None, pad_steps_floor: int = 64,
                  cache: Optional[ResultCache] = None, clock=time.monotonic,
-                 telemetry=None):
+                 telemetry=None, resilience: Optional[ResilienceConfig] = None,
+                 injector=None, sleep=time.sleep):
         if max_lanes < 1:
             raise ValueError("max_lanes must be >= 1")
         self.max_lanes = max_lanes
@@ -150,9 +200,18 @@ class SimBroker:
         self.pad_steps_floor = pad_steps_floor
         self.cache = cache if cache is not None else ResultCache()
         self.clock = clock
+        self.sleep = sleep
         self.telemetry = or_null(telemetry)
+        self.injector = or_null_injector(injector)
         if telemetry is not None and hasattr(self.cache, "attach_telemetry"):
             self.cache.attach_telemetry(self.telemetry)
+        if injector is not None and hasattr(self.cache, "attach_injector"):
+            self.cache.attach_injector(self.injector)
+        self.resilience = resilience if resilience is not None \
+            else ResilienceConfig()
+        self.quarantine = Quarantine(self.resilience.quarantine_ttl)
+        self.breaker = CircuitBreaker(self.resilience.breaker_threshold,
+                                      self.resilience.breaker_recovery)
         self.stats = BrokerStats()
         # bucket key -> (cache key -> pending lane), insertion-ordered
         self._buckets: Dict[Tuple, Dict[Tuple, _Pending]] = {}
@@ -177,6 +236,14 @@ class SimBroker:
                 spec, pad_to=_pow2ceil(natural.n_steps,
                                        self.pad_steps_floor))
         return spec.build(q.machine)
+
+    def query_digest(self, q: SimQuery) -> str:
+        """The stable digest quarantine deny-lists and
+        ``PoisonedQueryError`` carry (and the ``sweep.device`` injection
+        site matches ``fail_lane`` rules against)."""
+        if isinstance(q.trace, TraceSpec):
+            return lane_digest(spec_cache_key(q, self.pad_steps_floor))
+        return lane_digest(query_cache_key(q, self.canonical_trace(q)))
 
     def _bucket_key(self, q: SimQuery, canonical: Trace) -> Tuple:
         mc: MachineConfig = q.machine
@@ -207,16 +274,28 @@ class SimBroker:
                              args={"cache_hit": True})
             return fut
 
+        digest = lane_digest(key)
+        if self.quarantine.check(digest, self.clock()):
+            # known-poisoned: fail fast instead of re-poisoning a batch
+            tel.counter("broker.quarantine_rejections").inc()
+            fut._fail(PoisonedQueryError(digest, quarantined=True))
+            return fut
+
         if canonical is None:
             canonical = self.canonical_trace(q)
         bkey = self._bucket_key(q, canonical)
-        bucket = self._buckets.setdefault(bkey, {})
-        pend = bucket.get(key)
+        pend = self._buckets.get(bkey, {}).get(key)
         if pend is None:
+            if not self._admit_lane(q, fut):
+                return fut                # rejected: future already failed
+            # (re-)resolve the bucket only after admission: eviction may
+            # have emptied and dropped this very bucket's dict
+            bucket = self._buckets.setdefault(bkey, {})
             pend = _Pending(key, canonical, q, self.clock(),
                             admit_t=tel.now())
             bucket[key] = pend
         else:
+            bucket = self._buckets[bkey]
             self.stats.inflight_joins += 1
             tel.counter("broker.inflight_joins").inc()
         pend.futures.append(fut)
@@ -232,11 +311,46 @@ class SimBroker:
             self.pump()
         return fut
 
+    def _admit_lane(self, q: SimQuery, fut: SimFuture) -> bool:
+        """``max_pending_lanes`` admission control: when the broker is at
+        capacity, the lowest-priority lane loses — either the newcomer is
+        rejected outright, or (when the newcomer outranks it) the lowest
+        pending lane is evicted to make room.  Returns False when ``fut``
+        was failed with ``BrokerOverloadedError``."""
+        cap = self.resilience.max_pending_lanes
+        if cap is None or self.pending_lanes() < cap:
+            return True
+        tel = self.telemetry
+        victim_loc = None
+        for bk, bucket in self._buckets.items():
+            for key, p in bucket.items():
+                rank = (p.priority, -p.enqueue_t)   # lowest prio, youngest
+                if victim_loc is None or rank < victim_loc[0]:
+                    victim_loc = (rank, bk, key)
+        if victim_loc is not None and q.priority > victim_loc[0][0]:
+            _, bk, key = victim_loc
+            victim = self._buckets[bk].pop(key)
+            if not self._buckets[bk]:
+                del self._buckets[bk]
+            err = BrokerOverloadedError(self.pending_lanes() + 1, cap)
+            self.stats.rejected += len(victim.futures)
+            tel.counter("broker.overload_rejections").inc(
+                len(victim.futures))
+            self._settle_lane(victim, error=err)
+            return True
+        self.stats.rejected += 1
+        tel.counter("broker.overload_rejections").inc()
+        fut._fail(BrokerOverloadedError(self.pending_lanes(), cap))
+        return False
+
     def submit_many(self, queries: Sequence[SimQuery]) -> List[SimFuture]:
         return [self.submit(q) for q in queries]
 
     def run(self, queries: Sequence[SimQuery]) -> List[RunResult]:
-        """Submit a burst, drain every bucket, return aligned results."""
+        """Submit a burst, drain every bucket, return aligned results.
+
+        Raises the first failed future's typed error; callers that want
+        per-query errors use ``submit_many`` + ``result()``."""
         futs = self.submit_many(queries)
         self.drain()
         return [f.result() for f in futs]
@@ -254,7 +368,10 @@ class SimBroker:
 
     def pump(self, now: Optional[float] = None) -> int:
         """Flush every due bucket (max-wait age or deadline reached),
-        highest-priority bucket first.  Returns the number of flushes."""
+        highest-priority bucket first; equal priorities tie-break by
+        oldest enqueue.  Flush failures route to the affected futures —
+        ``pump`` itself never raises them — and per-bucket attempt bounds
+        guarantee termination.  Returns the number of flushes."""
         now = self.clock() if now is None else now
         due = [bk for bk, b in self._buckets.items() if self._due(b, now)]
         due.sort(key=lambda bk: (
@@ -262,31 +379,100 @@ class SimBroker:
             min(p.enqueue_t for p in self._buckets[bk].values())))
         n = 0
         for bk in due:
-            while self._buckets.get(bk):
-                self._flush(bk)
-                n += 1
+            n += self._drain_bucket(bk)
         return n
 
     def drain(self) -> None:
-        """Flush everything regardless of age/deadline."""
+        """Flush everything regardless of age/deadline.  Survives any
+        flush failure (errors route to futures + telemetry) and always
+        terminates: a bucket that will not empty within its bounded
+        attempts is abandoned, failing its futures."""
         while any(self._buckets.values()):
             for bk in list(self._buckets):
-                while self._buckets.get(bk):
-                    self._flush(bk)
+                self._drain_bucket(bk)
+
+    def _drain_bucket(self, bk: Tuple) -> int:
+        """Flush ``bk`` until empty; never raises, never livelocks.
+        Returns the number of completed ``_flush`` passes."""
+        bucket = self._buckets.get(bk)
+        if not bucket:
+            return 0
+        # each pass retires up to max_lanes lanes; 2x + slack tolerates
+        # sheds/evictions racing the count without permitting a livelock
+        limit = 2 * ((len(bucket) + self.max_lanes - 1)
+                     // self.max_lanes) + 2
+        flushes = 0
+        last_exc: Optional[BaseException] = None
+        for _ in range(limit):
+            if not self._buckets.get(bk):
+                return flushes
+            try:
+                self._flush(bk)
+                flushes += 1
+            except Exception as exc:  # noqa: BLE001 — route, don't raise
+                last_exc = exc
+                self.telemetry.counter("broker.flush_errors").inc()
+        if self._buckets.get(bk):
+            self._abandon_bucket(bk, last_exc)
+        return flushes
+
+    def _abandon_bucket(self, bk: Tuple, cause: Optional[BaseException]) \
+            -> None:
+        """Last-resort liveness: fail every future still in ``bk`` and
+        drop the bucket, so ``drain``/``pump`` terminate even when
+        ``_flush`` keeps raising without retiring lanes."""
+        bucket = self._buckets.pop(bk, None)
+        if not bucket:
+            return
+        err = RuntimeError(
+            f"bucket {_bucket_label(bk)} failed to flush within bounded "
+            "attempts; abandoning its lanes")
+        if cause is not None:
+            err.__cause__ = cause
+        n = 0
+        for p in bucket.values():
+            n += len(p.futures)
+            self._settle_lane(p, error=err)
+        self.telemetry.counter("broker.abandoned_futures").inc(n)
 
     def pending_lanes(self) -> int:
         return sum(len(b) for b in self._buckets.values())
 
-    def _force(self, fut: SimFuture) -> None:
+    def degraded_buckets(self) -> List[str]:
+        """Labels of buckets currently in degraded (per-lane) mode."""
+        return sorted(_bucket_label(bk) for bk in self.breaker.open_keys())
+
+    def _force(self, fut: SimFuture, timeout: Optional[float] = None) \
+            -> None:
         loc = self._fut_index.get(id(fut))
         if loc is None:                      # already resolved
             return
         bkey, _ = loc
+        t0 = self.clock() if timeout is not None else None
         while not fut.done():
+            if timeout is not None and self.clock() - t0 >= timeout:
+                from .resilience import BrokerTimeoutError
+                raise BrokerTimeoutError(timeout)
             if not self._buckets.get(bkey):
                 raise RuntimeError(
                     "future's bucket vanished without resolving it")
             self._flush(bkey)
+
+    # ------------------------------------------------------------------
+    # settlement (every path that retires a future goes through here, so
+    # _fut_index can never leak a stale id() key)
+    # ------------------------------------------------------------------
+    def _settle_future(self, fut: SimFuture, result=None, error=None) \
+            -> None:
+        self._fut_index.pop(id(fut), None)
+        if error is not None:
+            fut._fail(error)
+        else:
+            fut._resolve(result)
+
+    def _settle_lane(self, pend: _Pending, result=None, error=None) -> None:
+        for f in pend.futures:
+            self._settle_future(f, result=result, error=error)
 
     # ------------------------------------------------------------------
     # execution
@@ -299,6 +485,7 @@ class SimBroker:
         tel = self.telemetry
         blabel = _bucket_label(bkey) if tel.enabled else ""
         flush_t0 = tel.now()
+        wall_t0 = time.perf_counter()
         now = self.clock()
         pendings = sorted(
             bucket.values(),
@@ -318,9 +505,162 @@ class SimBroker:
                                  args={"bucket": blabel,
                                        "waiters": len(p.futures)})
 
+        live = self._shed_expired(batch, now)
+        if not live:
+            return                      # everything shed; nothing to run
+        self.stats.flushes += 1
+        if tel.enabled:
+            tel.counter("broker.flushes", bucket=blabel).inc()
+
+        if self.breaker.is_open(bkey):
+            self._flush_degraded(bkey, live, blabel)
+        else:
+            self._flush_batched(bkey, live, blabel)
+
+        if tel.enabled:
+            tel.histogram("broker.flush_seconds").observe(
+                time.perf_counter() - wall_t0)
+            tel.gauge("broker.pending_lanes").set(self.pending_lanes())
+            if flush_t0 is not None:
+                tel.add_span("bucket.flush", flush_t0, tel.now(),
+                             args={"bucket": blabel, "lanes": len(live)})
+
+    def _shed_expired(self, batch: Sequence[_Pending], now: float) \
+            -> List[_Pending]:
+        """Deadline enforcement: futures strictly past due fail with
+        ``DeadlineExceededError``; lanes with no live waiter left are
+        dropped before any device work."""
+        grace = self.resilience.deadline_grace
+        tel = self.telemetry
+        live: List[_Pending] = []
+        for p in batch:
+            keep: List[SimFuture] = []
+            for f in p.futures:
+                dl = f.query.deadline
+                if dl is not None and dl + grace < now:
+                    self.stats.shed += 1
+                    tel.counter("broker.deadline_shed").inc()
+                    self._settle_future(
+                        f, error=DeadlineExceededError(dl, now))
+                else:
+                    keep.append(f)
+            p.futures = keep
+            if keep:
+                live.append(p)
+        return live
+
+    def _flush_batched(self, bkey: Tuple, live: List[_Pending],
+                       blabel: str) -> None:
+        """The normal path: one batched execution with bounded transient
+        retries; a persistent failure trips the breaker and bisects."""
+        try:
+            results = self._run_with_retries(bkey, live, blabel)
+        except Exception as exc:  # noqa: BLE001 — typed handling below
+            self.breaker.record_failure(bkey)
+            self._update_degraded_gauge()
+            if len(live) == 1:
+                self._poison(live[0], exc)
+            else:
+                mid = (len(live) + 1) // 2
+                self._bisect(bkey, live[:mid], blabel)
+                self._bisect(bkey, live[mid:], blabel)
+            return
+        self.breaker.record_success(bkey)
+        self._resolve_batch(live, results, blabel)
+
+    def _flush_degraded(self, bkey: Tuple, live: List[_Pending],
+                        blabel: str) -> None:
+        """Degraded (breaker-open) mode: every lane runs solo with
+        ``debug=True`` — slow, but a failure can only take down its own
+        lane.  A fully clean pass counts toward breaker recovery."""
+        tel = self.telemetry
+        tel.counter("broker.degraded_flushes", bucket=blabel).inc()
+        clean = True
+        for p in live:
+            try:
+                res = self._run_with_retries(bkey, [p], blabel,
+                                             degraded=True)[0]
+            except Exception as exc:  # noqa: BLE001
+                clean = False
+                self._poison(p, exc)
+                continue
+            self._resolve_batch([p], [res], blabel)
+        if clean:
+            self.breaker.record_success(bkey)
+        else:
+            self.breaker.record_failure(bkey)
+        self._update_degraded_gauge()
+
+    def _run_with_retries(self, bkey: Tuple, pendings: List[_Pending],
+                          blabel: str, degraded: bool = False) \
+            -> List[RunResult]:
+        """Execute one lane group, retrying transient failures with
+        exponential backoff.  Raises the final error when the failure is
+        persistent or the retry budget is exhausted."""
+        rs = self.resilience
+        tel = self.telemetry
+        attempt = 0
+        while True:
+            try:
+                self.injector.fire("broker.flush", bucket=blabel)
+                return self._run_lanes(bkey, pendings, blabel,
+                                       degraded=degraded)
+            except Exception as exc:  # noqa: BLE001 — classified below
+                tel.counter("broker.flush_failures").inc()
+                # injected faults carry an explicit transience flag; real
+                # device errors default to retryable
+                transient = getattr(exc, "transient", True)
+                if not transient or attempt >= rs.max_retries:
+                    raise
+                delay = rs.backoff(attempt)
+                tel.histogram("broker.backoff_seconds").observe(delay)
+                self.sleep(delay)
+                attempt += 1
+                self.stats.retries += 1
+                tel.counter("broker.retries").inc()
+
+    def _bisect(self, bkey: Tuple, pendings: List[_Pending],
+                blabel: str) -> None:
+        """Poison-lane isolation: run the group once as a normal
+        ``sweep_lanes`` call; on failure split it, recursing log2-deep
+        until single lanes fail alone and are quarantined.  Innocent
+        lanes resolve with results bit-identical to a fault-free run."""
+        self.telemetry.counter("broker.bisect_runs").inc()
+        try:
+            results = self._run_lanes(bkey, pendings, blabel)
+        except Exception as exc:  # noqa: BLE001
+            self.telemetry.counter("broker.flush_failures").inc()
+            if len(pendings) == 1:
+                self._poison(pendings[0], exc)
+                return
+            mid = (len(pendings) + 1) // 2
+            self._bisect(bkey, pendings[:mid], blabel)
+            self._bisect(bkey, pendings[mid:], blabel)
+            return
+        self._resolve_batch(pendings, results, blabel)
+
+    def _poison(self, pend: _Pending, cause: BaseException) -> None:
+        digest = lane_digest(pend.key)
+        self.quarantine.add(digest, self.clock())
+        self.stats.quarantined += 1
+        self.telemetry.counter("broker.quarantined").inc()
+        self._settle_lane(pend, error=PoisonedQueryError(digest,
+                                                         cause=cause))
+
+    def _update_degraded_gauge(self) -> None:
+        self.telemetry.gauge("broker.degraded").set(
+            1 if self.breaker.open_keys() else 0)
+
+    def _run_lanes(self, bkey: Tuple, pendings: List[_Pending],
+                   blabel: str, degraded: bool = False) -> List[RunResult]:
+        """One ``sweep_lanes`` execution over ``pendings`` (pow2 lane
+        padding as always, so compile-key quantization holds for full
+        batches and bisection halves alike).  Fires the ``sweep.device``
+        injection site with the group's lane digests."""
+        tel = self.telemetry
         mc, phase_b, engine, _, _ = bkey
         qbudget = _pow2ceil(min(
-            max(int(p.query.policy.autonuma_budget) for p in batch),
+            max(int(p.query.policy.autonuma_budget) for p in pendings),
             mc.n_map))
         # The allocator conflict-group bound is trace-content-derived, so
         # letting sweep_lanes compute it per batch would mint up to
@@ -330,70 +670,53 @@ class SimBroker:
         # maximum (full thread depth — the pre-blocked-engine status quo
         # for fault steps; per-lane results are unaffected).
         qgroup = mc.n_threads if phase_b == "batched" else None
-        ccs = [p.query.cost for p in batch]
-        pcs = [p.query.policy for p in batch]
-        trs = [p.trace for p in batch]
+        ccs = [p.query.cost for p in pendings]
+        pcs = [p.query.policy for p in pendings]
+        trs = [p.trace for p in pendings]
         # Lane padding replicates lane 0, which is also block-aware: a pad
         # lane adds no new trace, so the union event mask — and with it
         # the windowed shapes the blocked engine compiles for — stays
         # exactly the batch's own, and pow2 lane counts keep quantizing.
-        n_pad = _pow2ceil(len(batch)) - len(batch)
+        n_pad = _pow2ceil(len(pendings)) - len(pendings)
         for _ in range(n_pad):
-            ccs.append(batch[0].query.cost)
-            pcs.append(batch[0].query.policy)
-            trs.append(batch[0].trace)
+            ccs.append(pendings[0].query.cost)
+            pcs.append(pendings[0].query.policy)
+            trs.append(pendings[0].trace)
 
+        self.injector.fire("sweep.device", bucket=blabel,
+                           lanes=[lane_digest(p.key) for p in pendings])
         before = sweep_compile_count()
-        wall_t0 = time.perf_counter()
-        try:
-            results = sweep_lanes(
-                mc, ccs, pcs, trs, phase_b=phase_b, budget=qbudget,
-                lane_sharding=self.lane_sharding, engine=engine,
-                group=qgroup,
-                # queries on a reference path already carried debug=True
-                # (SimQuery validates); the bucket inherits it
-                debug=(engine != "blocked" or phase_b != "batched"),
-                telemetry=tel)
-        except Exception as exc:
-            # a poisoned microbatch must not strand its futures: fail the
-            # whole batch (waiters raise instead of spinning) and let the
-            # flusher see the error too
-            for p in batch:
-                for f in p.futures:
-                    self._fut_index.pop(id(f), None)
-                    f._fail(exc)
-            tel.counter("broker.flush_failures").inc()
-            raise
+        results = sweep_lanes(
+            mc, ccs, pcs, trs, phase_b=phase_b, budget=qbudget,
+            lane_sharding=self.lane_sharding, engine=engine,
+            group=qgroup,
+            # queries on a reference path already carried debug=True
+            # (SimQuery validates); degraded mode always isolates with it
+            debug=(degraded or engine != "blocked" or phase_b != "batched"),
+            telemetry=tel)
         compiles = sweep_compile_count() - before
         self.stats.compiles += compiles
-        self.stats.flushes += 1
-        self.stats.lanes_run += len(batch)
+        self.stats.lanes_run += len(pendings)
         self.stats.pad_lanes += n_pad
         if tel.enabled:
-            tel.counter("broker.flushes", bucket=blabel).inc()
             tel.counter("broker.compiles", bucket=blabel).inc(compiles)
-            tel.counter("broker.lanes_run", bucket=blabel).inc(len(batch))
+            tel.counter("broker.lanes_run", bucket=blabel).inc(len(pendings))
             tel.counter("broker.pad_lanes", bucket=blabel).inc(n_pad)
-            tel.histogram("broker.flush_seconds").observe(
-                time.perf_counter() - wall_t0)
-            tel.gauge("broker.pending_lanes").set(self.pending_lanes())
+        return results[:len(pendings)]
 
+    def _resolve_batch(self, pendings: Sequence[_Pending],
+                       results: Sequence[RunResult], blabel: str) -> None:
+        tel = self.telemetry
         resolve_t0 = tel.now()
-        for p, res in zip(batch, results):
+        for p, res in zip(pendings, results):
             self.cache.put(p.key, res)
-            for f in p.futures:
-                self._fut_index.pop(id(f), None)
-                f._resolve(res)
+            self._settle_lane(p, result=res)
         if tel.enabled:
-            self._record_summaries(batch, results)
-            if flush_t0 is not None:
-                t1 = tel.now()
-                tel.add_span("query.resolve", resolve_t0, t1,
-                             args={"bucket": blabel, "lanes": len(batch)})
-                tel.add_span("bucket.flush", flush_t0, t1,
-                             args={"bucket": blabel, "lanes": len(batch),
-                                   "pad_lanes": n_pad,
-                                   "compiles": compiles})
+            self._record_summaries(pendings, results)
+            if resolve_t0 is not None:
+                tel.add_span("query.resolve", resolve_t0, tel.now(),
+                             args={"bucket": blabel,
+                                   "lanes": len(pendings)})
 
     def _record_summaries(self, batch: Sequence[_Pending],
                           results: Sequence[RunResult]) -> None:
@@ -418,11 +741,17 @@ class SimBroker:
 
     def snapshot(self) -> Dict[str, object]:
         """One JSON-friendly dict of everything observable: broker stats,
-        cache stats (both tiers) and the telemetry snapshot.  The blessed
+        cache stats (both tiers), resilience state (quarantine size,
+        degraded buckets) and the telemetry snapshot.  The blessed
         artifact payload — replaces ad-hoc ``stats.as_dict()`` readouts."""
         out = {"broker": self.stats.as_dict(),
-               "pending_lanes": self.pending_lanes()}
+               "pending_lanes": self.pending_lanes(),
+               "quarantine": {"size": len(self.quarantine),
+                              "digests": self.quarantine.digests()},
+               "degraded_buckets": self.degraded_buckets()}
         if hasattr(self.cache, "stats"):
             out["cache"] = self.cache.stats()
+        if self.injector.rules:
+            out["faults"] = self.injector.stats()
         out["telemetry"] = self.telemetry.snapshot()
         return out

@@ -18,6 +18,16 @@ directory serves warm hits with zero device work.  The disk tier is an
 mtime-LRU with a byte cap; entries store their full key alongside the
 value, so a (vanishingly unlikely) filename-hash collision or a stale
 format reads as a miss, never as a wrong result.
+
+The disk tier is *self-healing*: every entry carries a framed header
+(magic + blake2b payload checksum + length) written via temp-file +
+atomic rename, so a torn write, bit rot, or truncation is detected on
+read — the entry is counted (``cache.disk.corrupt``), moved to a
+``quarantine/`` sidecar directory for post-mortem, and served as a miss
+so the value is recomputed and rewritten clean.  Corruption can never
+surface as a wrong result, only as a recompute.  The chaos harness
+(:mod:`repro.obs.inject`) hooks the ``cache.disk.read`` /
+``cache.disk.write`` sites to exercise exactly these paths.
 """
 from __future__ import annotations
 
@@ -31,8 +41,34 @@ from typing import Optional, Tuple
 
 from ..core.sim import RunResult
 from ..obs import or_null
+from ..obs.inject import InjectedFault, or_null_injector
 
-_DISK_FORMAT = 1
+_DISK_FORMAT = 2
+# Framed entry: magic/version | blake2b-16(payload) | u64 payload length
+_MAGIC = b"RPTC\x02"
+_CKSUM_LEN = 16
+_HEADER_LEN = len(_MAGIC) + _CKSUM_LEN + 8
+
+
+def _frame(payload: bytes) -> bytes:
+    cksum = hashlib.blake2b(payload, digest_size=_CKSUM_LEN).digest()
+    return _MAGIC + cksum + len(payload).to_bytes(8, "big") + payload
+
+
+def _unframe(record: bytes) -> bytes:
+    """Payload of a framed record; raises ``ValueError`` on any sign of
+    corruption (bad magic, truncation, checksum mismatch)."""
+    if len(record) < _HEADER_LEN or not record.startswith(_MAGIC):
+        raise ValueError("bad magic or truncated header")
+    off = len(_MAGIC)
+    cksum = record[off:off + _CKSUM_LEN]
+    n = int.from_bytes(record[off + _CKSUM_LEN:_HEADER_LEN], "big")
+    payload = record[_HEADER_LEN:]
+    if len(payload) != n:
+        raise ValueError("payload length mismatch (torn write?)")
+    if hashlib.blake2b(payload, digest_size=_CKSUM_LEN).digest() != cksum:
+        raise ValueError("payload checksum mismatch")
+    return payload
 
 
 class DiskCacheTier:
@@ -50,15 +86,18 @@ class DiskCacheTier:
     registry under ``cache.disk.*``.
     """
 
-    def __init__(self, path, max_bytes: int = 1 << 30, telemetry=None):
+    def __init__(self, path, max_bytes: int = 1 << 30, telemetry=None,
+                 injector=None):
         self.path = Path(path)
         self.path.mkdir(parents=True, exist_ok=True)
         self.max_bytes = int(max_bytes)
         self.telemetry = or_null(telemetry)
+        self.injector = or_null_injector(injector)
         self.hits = 0
         self.misses = 0
         self.flushes = 0       # entries written (spilled) to disk
         self.evictions = 0     # entries unlinked by the byte cap
+        self.corrupt = 0       # entries failing frame/checksum validation
         # Running byte estimate so put() doesn't rescan the directory
         # every time: None = unknown (first put resyncs via _evict);
         # overwrites over-count, which only triggers an early resync.
@@ -68,16 +107,46 @@ class DiskCacheTier:
         digest = hashlib.blake2b(repr(key).encode(), digest_size=16)
         return self.path / f"{digest.hexdigest()}.pkl"
 
+    def _quarantine(self, f: Path) -> None:
+        """Move a corrupt entry to the ``quarantine/`` sidecar for
+        post-mortem (never served again; never re-detected as corrupt)."""
+        qdir = self.path / "quarantine"
+        try:
+            qdir.mkdir(exist_ok=True)
+            os.replace(f, qdir / f.name)
+        except OSError:
+            try:
+                f.unlink()              # sidecar unavailable: just drop it
+            except OSError:
+                pass
+
     def get(self, key: Tuple) -> Optional[RunResult]:
         f = self._file(key)
         try:
+            self.injector.fire("cache.disk.read", key=f.stem)
             with open(f, "rb") as fh:
-                payload = pickle.load(fh)
+                record = fh.read()
+        except FileNotFoundError:
+            self.misses += 1
+            self.telemetry.counter("cache.disk.misses").inc()
+            return None
+        except (OSError, InjectedFault):
+            # an I/O error (real or injected) is a miss, not corruption
+            self.misses += 1
+            self.telemetry.counter("cache.disk.misses").inc()
+            return None
+        try:
+            payload = pickle.loads(_unframe(record))
             if (payload.get("format") != _DISK_FORMAT
                     or payload.get("key") != key):
                 raise ValueError("stale or colliding cache entry")
-        except (OSError, ValueError, pickle.UnpicklingError, EOFError,
-                AttributeError, ImportError):
+        except Exception:  # noqa: BLE001 — any decode failure = corrupt
+            # the entry existed but failed validation: self-heal by
+            # quarantining it and reporting a miss so the value is
+            # recomputed and rewritten clean
+            self.corrupt += 1
+            self.telemetry.counter("cache.disk.corrupt").inc()
+            self._quarantine(f)
             self.misses += 1
             self.telemetry.counter("cache.disk.misses").inc()
             return None
@@ -90,14 +159,24 @@ class DiskCacheTier:
         return payload["value"]
 
     def put(self, key: Tuple, value: RunResult) -> None:
-        blob = pickle.dumps({"format": _DISK_FORMAT, "key": key,
-                             "value": value})
-        if len(blob) > self.max_bytes:
+        record = _frame(pickle.dumps(
+            {"format": _DISK_FORMAT, "key": key, "value": value}))
+        if len(record) > self.max_bytes:
             return
+        try:
+            self.injector.fire("cache.disk.write", key=self._file(key).stem)
+        except InjectedFault as exc:
+            if exc.kind == "corrupt":
+                # simulate a torn write: half the framed record lands on
+                # disk (still via atomic rename — the tear is in the
+                # content, which only the checksum frame can catch)
+                record = record[:max(len(record) // 2, 1)]
+            else:
+                return                       # injected write error: drop
         fd, tmp = tempfile.mkstemp(dir=self.path, suffix=".tmp")
         try:
             with os.fdopen(fd, "wb") as fh:
-                fh.write(blob)
+                fh.write(record)
             os.replace(tmp, self._file(key))
         except OSError:
             try:
@@ -108,7 +187,7 @@ class DiskCacheTier:
         self.flushes += 1
         self.telemetry.counter("cache.disk.flushes").inc()
         if self._approx_bytes is not None:
-            self._approx_bytes += len(blob)
+            self._approx_bytes += len(record)
         if self._approx_bytes is None or self._approx_bytes > self.max_bytes:
             self._evict()                    # scans once, then resyncs
 
@@ -136,10 +215,18 @@ class DiskCacheTier:
     def stats(self) -> dict:
         return {"hits": self.hits, "misses": self.misses,
                 "flushes": self.flushes, "evictions": self.evictions,
-                "entries": sum(1 for _ in self.path.glob("*.pkl"))}
+                "corrupt": self.corrupt,
+                "entries": sum(1 for _ in self.path.glob("*.pkl")),
+                "quarantined": sum(
+                    1 for _ in (self.path / "quarantine").glob("*.pkl"))}
 
     def clear(self) -> None:
         for f in self.path.glob("*.pkl"):
+            try:
+                f.unlink()
+            except OSError:
+                pass
+        for f in (self.path / "quarantine").glob("*.pkl"):
             try:
                 f.unlink()
             except OSError:
@@ -173,6 +260,12 @@ class ResultCache:
         self.telemetry = or_null(telemetry)
         if self.disk is not None:
             self.disk.telemetry = self.telemetry
+
+    def attach_injector(self, injector) -> None:
+        """Late-bind a fault injector over the disk sites (the broker
+        owns the chaos plan but callers may hand it a pre-built cache)."""
+        if self.disk is not None:
+            self.disk.injector = or_null_injector(injector)
 
     def __len__(self) -> int:
         return len(self._data)

@@ -9,6 +9,7 @@ share one cache line and one lane.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Optional, Tuple, Union
 
 from ..core.config import CostConfig, MachineConfig, PolicyConfig
@@ -84,6 +85,15 @@ def query_cache_key(q: SimQuery, canonical: Trace) -> Tuple:
             _leaf_tuple(q.policy, "PolicyConfig"), trace_digest(canonical))
 
 
+def lane_digest(key: Tuple) -> str:
+    """Short stable digest of a cache key — the identity that
+    ``PoisonedQueryError`` carries, the quarantine deny-list stores, and
+    ``fail_lane`` chaos rules match against.  Cache keys are tuples of
+    dataclass instances and scalars whose reprs are process-stable, so
+    hashing the repr is deterministic across runs."""
+    return hashlib.blake2b(repr(key).encode(), digest_size=8).hexdigest()
+
+
 def spec_cache_key(q: SimQuery, pad_floor: int) -> Tuple:
     """Identity of a spec-addressed query WITHOUT materializing the trace
     — the spec recipe digest (plus the broker's canonical pad floor,
@@ -104,7 +114,11 @@ class SimFuture:
     ``result()`` drives the broker until this query's bucket has flushed
     (the broker is synchronous and in-process; a future is "pending"
     exactly while its query waits in an admission bucket for a microbatch
-    to fill or come due).
+    to fill or come due).  ``result(timeout=...)`` bounds that drive on
+    the broker's scheduling clock and raises ``BrokerTimeoutError`` when
+    the budget runs out; the future stays pending and can be re-forced.
+    A failed query re-raises its typed ``ServiceError`` (poisoned, shed,
+    rejected) on every ``result()`` call.
     """
 
     __slots__ = ("query", "from_cache", "_broker", "_result", "_error")
@@ -119,9 +133,9 @@ class SimFuture:
     def done(self) -> bool:
         return self._result is not None or self._error is not None
 
-    def result(self) -> RunResult:
+    def result(self, timeout: Optional[float] = None) -> RunResult:
         if not self.done():
-            self._broker._force(self)
+            self._broker._force(self, timeout=timeout)
         if self._error is not None:
             raise self._error
         assert self._result is not None

@@ -27,6 +27,7 @@ from ..core.sim import Trace
 from ..core.workloads import TraceSpec
 from .broker import SimBroker
 from .query import SimQuery
+from .resilience import ServiceError
 
 DEFAULT_SPACE: Dict[str, Sequence] = {
     "data_policy": (FIRST_TOUCH, INTERLEAVE),
@@ -57,17 +58,33 @@ def grid_search(broker: SimBroker, mc: MachineConfig,
                 objective: str = "total_cycles",
                 ) -> List[Tuple[PolicyConfig, float]]:
     """Score every policy on one trace; return (policy, objective) sorted
-    ascending (lower is better — objectives are cycle/event counts)."""
+    ascending (lower is better — objectives are cycle/event counts).
+
+    A candidate whose lane fails with a typed :class:`ServiceError`
+    (shed deadline, poisoned, rejected by admission control) is dropped
+    from the ranking and counted (``search.dropped_lanes``) instead of
+    failing the whole rung — a search over N candidates survives losing
+    a few.  Non-service errors still propagate."""
     cc = cc if cc is not None else CostConfig()
     tel = broker.telemetry
     queries = [SimQuery(trace=trace, policy=pc, cost=cc, machine=mc)
                for pc in policies]
     with tel.span("search.grid", args={"candidates": len(queries),
                                        "objective": objective}):
-        results = broker.run(queries)
+        futs = broker.submit_many(queries)
+        broker.drain()
     tel.counter("search.evaluations").inc(len(queries))
-    scored = [(pc, float(res.summary()[objective]))
-              for pc, res in zip(policies, results)]
+    scored = []
+    dropped = 0
+    for pc, fut in zip(policies, futs):
+        try:
+            res = fut.result()
+        except ServiceError:
+            dropped += 1
+            continue
+        scored.append((pc, float(res.summary()[objective])))
+    if dropped:
+        tel.counter("search.dropped_lanes").inc(dropped)
     scored.sort(key=lambda t: t[1])
     return scored
 
@@ -102,6 +119,10 @@ def successive_halving(broker: SimBroker, mc: MachineConfig,
                             "candidates": len(cands)}):
             scored = grid_search(broker, mc, rung_spec, cands, cc=cc,
                                  objective=objective)
+        if not scored:
+            raise ServiceError(
+                f"successive_halving rung {r}: every candidate lane "
+                "failed; nothing left to halve")
         tel.counter("search.rungs").inc()
         history.append({
             "rung": r, "run_steps": rung_spec.run_steps,

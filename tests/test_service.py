@@ -252,10 +252,17 @@ def test_priority_orders_due_buckets(stub_exec):
 
 
 def test_failed_flush_fails_futures_not_hangs(monkeypatch):
-    """A poisoned microbatch must fail its futures (raising result()),
-    not strand them; the broker stays usable afterwards."""
+    """A poisoned microbatch must fail its futures with a typed
+    PoisonedQueryError (drain() itself survives), quarantine the digests
+    so resubmits fail fast, and stay usable once the quarantine TTL
+    lapses."""
+    from repro.service.resilience import (PoisonedQueryError,
+                                          ResilienceConfig)
     mc = tiny_machine()
-    broker = SimBroker(max_lanes=64, max_wait=1e9)
+    clock = FakeClock()
+    broker = SimBroker(
+        max_lanes=64, max_wait=1e9, clock=clock, sleep=lambda s: None,
+        resilience=ResilienceConfig(max_retries=1, quarantine_ttl=10.0))
     tr = random_trace(mc, seed=13)
     futs = [broker.submit(SimQuery(trace=tr, policy=pc, machine=mc))
             for pc in MIXED_POLICIES[:2]]
@@ -266,15 +273,25 @@ def test_failed_flush_fails_futures_not_hangs(monkeypatch):
         raise boom
 
     monkeypatch.setattr(broker_mod, "sweep_lanes", exploding)
-    with pytest.raises(RuntimeError, match="XLA fell over"):
-        broker.drain()
+    broker.drain()                       # survives the failure
     for f in futs:
         assert f.done()
-        with pytest.raises(RuntimeError, match="XLA fell over"):
+        with pytest.raises(PoisonedQueryError) as ei:
             f.result()
+        assert ei.value.__cause__ is boom
+    assert broker.stats.quarantined == 2
+    assert broker.stats.retries == 1     # one transient retry, then bisect
+
+    # quarantined digests fail fast on resubmit — zero device calls
+    fast = broker.submit(SimQuery(trace=tr, policy=MIXED_POLICIES[0],
+                                  machine=mc))
+    with pytest.raises(PoisonedQueryError) as ei:
+        fast.result()
+    assert ei.value.quarantined
     monkeypatch.undo()
 
-    # bucket is clear; new traffic flows normally
+    # TTL lapses: bucket is clear and new traffic flows normally
+    clock.now += 11.0
     assert broker.pending_lanes() == 0
     res = broker.run([SimQuery(trace=tr, policy=MIXED_POLICIES[0],
                                machine=mc)])[0]
