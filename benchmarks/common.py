@@ -24,8 +24,10 @@ from repro.core import (CostConfig, MachineConfig, PolicyConfig,
                         TieredMemSimulator, Trace, benchmark_machine,
                         bhi, bhi_mig, bind_all, linux_default, pad_trace,
                         sweep, workloads)
+from repro.obs import bench as obsbench
 
 ART = Path(__file__).resolve().parent.parent / "artifacts" / "bench"
+HISTORY = ART / "history.jsonl"
 
 # Process-wide benchmark telemetry (lazy).  Drivers report into it, embed
 # its snapshot in their artifacts, and ``run.py --verbose`` prints it
@@ -92,7 +94,7 @@ def make_traces(mc: MachineConfig, run_steps: int = RUN_STEPS,
 
 def run(mc: MachineConfig, pc: PolicyConfig, trace: Trace):
     t0 = time.time()
-    res = TieredMemSimulator(mc=mc, pc=pc).run(trace)
+    res = TieredMemSimulator(mc=mc, pc=pc, telemetry=telemetry()).run(trace)
     return res, time.time() - t0
 
 
@@ -107,7 +109,7 @@ def run_sweep(mc: MachineConfig, policies, traces, cc: Optional[CostConfig] = No
     """
     t0 = time.time()
     results = sweep(mc, cc if cc is not None else CostConfig(), policies,
-                    traces)
+                    traces, telemetry=telemetry())
     n_traces = 1 if isinstance(traces, Trace) else len(traces)
     lanes = max(len(policies) * n_traces, 1)
     return results, (time.time() - t0) / lanes
@@ -154,3 +156,48 @@ def save_artifact(name: str, payload):
     ART.mkdir(parents=True, exist_ok=True)
     (ART / f"{name}.json").write_text(json.dumps(payload, indent=1,
                                                  default=float))
+
+
+# ---------------------------------------------------------------------------
+# BenchRecord emission (the perf observatory's ingest path).
+#
+# One monotonic run id per process (all drivers of one `benchmarks.run`
+# invocation share it); each driver's wall clock runs from the harness's
+# begin_driver() call — run.py calls it before every driver, standalone
+# `python -m benchmarks.<driver>` falls back to process start.
+# ---------------------------------------------------------------------------
+_PROC_T0 = time.time()
+_RUN_STATE = {"run_id": None, "driver_t0": None}
+
+
+def run_id() -> int:
+    if _RUN_STATE["run_id"] is None:
+        _RUN_STATE["run_id"] = obsbench.next_run_id(HISTORY)
+    return _RUN_STATE["run_id"]
+
+
+def begin_driver(name: str = "") -> None:
+    """Mark the start of one driver's wall clock."""
+    _RUN_STATE["driver_t0"] = time.time()
+
+
+def emit_record(name: str, payload, rows: List[tuple] = (),
+                quick: bool = False, history: bool = True):
+    """The one way a driver lands its results: writes the per-driver
+    ``artifacts/bench/<name>.json`` (unchanged format — downstream
+    readers like table4 still consume it) AND appends a schema-valid
+    BenchRecord — figures rows, flattened metrics, telemetry snapshot,
+    git/machine fingerprint — to ``artifacts/bench/history.jsonl``.
+    """
+    save_artifact(name, payload)
+    t0 = _RUN_STATE["driver_t0"] or _PROC_T0
+    snap = None
+    if _TELEMETRY is not None:
+        snap = _TELEMETRY.snapshot().get("metrics")
+    rec = obsbench.make_record(
+        driver=name, payload=payload, figures=rows,
+        wall_seconds=time.time() - t0, quick=quick, run_id=run_id(),
+        snapshot=snap)
+    if history:
+        obsbench.append_record(rec, HISTORY)
+    return rec

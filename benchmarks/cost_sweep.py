@@ -112,7 +112,7 @@ def main(quick: bool = False):
         "snapshot": broker.snapshot(),
     }
     common.emit(rows)
-    common.save_artifact("cost_sweep", results)
+    common.emit_record("cost_sweep", results, rows=rows, quick=quick)
     return results
 
 
@@ -244,7 +244,7 @@ def scenario_main(quick: bool = False):
         "snapshot": broker.snapshot(),
     }
     common.emit(rows)
-    common.save_artifact("scenario_matrix", results)
+    common.emit_record("scenario_matrix", results, rows=rows, quick=quick)
     assert compile_check["ok"], (
         f"scenario matrix recompiled: expected one compile per (tier "
         f"topology, trace shape) bucket = {expected_compiles}, "

@@ -87,7 +87,7 @@ def main(quick: bool = False):
                 f"sequential_sps={r['sequential']['lane_steps_per_sec']:.0f}"))
     common.emit(rows)
     results["telemetry"] = common.telemetry().snapshot()
-    common.save_artifact("fault_batch", results)
+    common.emit_record("fault_batch", results, rows=rows, quick=quick)
     return results
 
 

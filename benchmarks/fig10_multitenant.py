@@ -54,7 +54,7 @@ def main(quick: bool = False):
         g = common.geomean_improvement(
             [results[w]["BHi+Mig"]["improv"][k] for w in results])
         print(f"fig10/geomean/BHi+Mig/{k},0.00,{g:.2f}%", flush=True)
-    common.save_artifact("fig10_multitenant", results)
+    common.emit_record("fig10_multitenant", results, rows=rows, quick=quick)
     return results
 
 

@@ -47,7 +47,7 @@ def main(quick: bool = False):
         g = common.geomean_improvement(
             [results[w]["interleave+BHi"]["improv"][k] for w in results])
         print(f"fig11/geomean/BHi/{k},0.00,{g:.2f}%", flush=True)
-    common.save_artifact("fig11_interleave", results)
+    common.emit_record("fig11_interleave", results, rows=rows, quick=quick)
     return results
 
 

@@ -38,7 +38,7 @@ def main(quick: bool = False):
         g = common.geomean_improvement(
             [results[w]["thp-BHi"]["improv"][k] for w in results])
         print(f"fig13/geomean/BHi/{k},0.00,{g:.2f}%", flush=True)
-    common.save_artifact("fig13_thp", results)
+    common.emit_record("fig13_thp", results, rows=rows, quick=quick)
     return results
 
 

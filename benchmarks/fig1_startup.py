@@ -51,7 +51,7 @@ def main(quick: bool = False):
                      f"startup%={imp:.1f};walk%={walk_imp:.1f};"
                      f"sim_sps={sim_sps:.0f}"))
     common.emit(rows)
-    common.save_artifact("fig1_startup", results)
+    common.emit_record("fig1_startup", results, rows=rows, quick=quick)
     return results
 
 

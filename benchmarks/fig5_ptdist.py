@@ -41,7 +41,7 @@ def main(quick: bool = False):
                      f"pt_on_nvmm={100*pt_nvmm/max(pt_all,1):.0f}%;"
                      f"dram_free_pages={dist['dram_free']}"))
     common.emit(rows)
-    common.save_artifact("fig5_ptdist", results)
+    common.emit_record("fig5_ptdist", results, rows=rows, quick=quick)
     return results
 
 

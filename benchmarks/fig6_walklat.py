@@ -30,7 +30,7 @@ def main(quick: bool = False):
                      f"start_lat={lat[1]:.0f}cy;end_lat={lat[-1]:.0f}cy;"
                      f"peak_lat={lat.max():.0f}cy"))
     common.emit(rows)
-    common.save_artifact("fig6_walklat", results)
+    common.emit_record("fig6_walklat", results, rows=rows, quick=quick)
     return results
 
 

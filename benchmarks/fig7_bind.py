@@ -35,7 +35,7 @@ def main(quick: bool = False):
                      f"oom_killed={m['oom_killed']};oom_step={m['oom_step']};"
                      f"faults={m['faults']}"))
     common.emit(rows)
-    common.save_artifact("fig7_bind", results)
+    common.emit_record("fig7_bind", results, rows=rows, quick=quick)
     return results
 
 

@@ -50,7 +50,7 @@ def main(quick: bool = False):
                 [results[w][pname]["improv"][k] for w in results])
             rows.append((f"fig9/geomean/{pname}/{k}", 0.0, f"{g:.2f}%"))
             print(f"fig9/geomean/{pname}/{k},0.00,{g:.2f}%", flush=True)
-    common.save_artifact("fig9_fullsystem", results)
+    common.emit_record("fig9_fullsystem", results, rows=rows, quick=quick)
     return results
 
 

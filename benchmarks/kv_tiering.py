@@ -64,7 +64,7 @@ def main(quick: bool = False):
                      f"cold_walks={r['cold_walks']};violations={viol};"
                      f"leaf_migs={r['leaf_promote']}+{r['leaf_demote']}"))
     common.emit(rows)
-    common.save_artifact("kv_tiering", results)
+    common.emit_record("kv_tiering", results, rows=rows, quick=quick)
     return results
 
 

@@ -225,6 +225,7 @@ def to_markdown(rows, mesh: str) -> str:
 
 
 def main(quick: bool = False):
+    from . import common
     all_rows = {}
     for mesh in ("single", "multipod", *list_variant_dirs()):
         rows = build_table(mesh)
@@ -240,6 +241,12 @@ def main(quick: bool = False):
                       f"peakGiB={r['peak_gib']:.1f}", flush=True)
     (ART / "roofline.json").write_text(
         json.dumps(all_rows, indent=1, default=str))
+    # BenchRecord: a summary payload (the full tables stay in
+    # artifacts/roofline.json — row dicts carry status strings)
+    summary = {mesh: {"rows": len(rows),
+                      "ok": sum(1 for r in rows if r["status"] == "ok")}
+               for mesh, rows in all_rows.items()}
+    common.emit_record("roofline", {"meshes": summary}, quick=quick)
     return all_rows
 
 

@@ -76,6 +76,8 @@ def main() -> None:
 
     print("name,seconds,derived", flush=True)
     failures = []
+    drivers: dict = {}
+    suite_t0 = time.time()
     for name in names:
         target = FIGURES[name][0]
         modname, _, func = target.partition(":")
@@ -83,13 +85,18 @@ def main() -> None:
         # scope the shared telemetry to this driver so --verbose (and any
         # snapshot the driver embeds) reads one driver's worth of data
         common.telemetry().reset()
+        common.begin_driver(name)
         t0 = time.time()
         try:
             getattr(mod, func or "main")(quick=args.quick)
+            drivers[name] = {"seconds": time.time() - t0, "status": "ok"}
             print(f"{name}/done,{time.time() - t0:.1f},ok", flush=True)
         except Exception as e:  # noqa: BLE001 — report, keep going
             failures.append(name)
             traceback.print_exc()
+            drivers[name] = {"seconds": time.time() - t0,
+                             "status": "failed",
+                             "error": f"{type(e).__name__}: {e}"}
             print(f"{name}/done,{time.time() - t0:.1f},"
                   f"FAILED:{type(e).__name__}", flush=True)
         if args.verbose:
@@ -98,6 +105,22 @@ def main() -> None:
                   f"{json.dumps(snap, sort_keys=True, default=float)}",
                   flush=True)
     ok = len(names) - len(failures)
+    # the per-invocation run manifest: which drivers ran under which run
+    # id, each one's wall clock and exit status, and the failure summary
+    manifest = {
+        "schema": "run-manifest/v1",
+        "run_id": common.run_id(),
+        "quick": bool(args.quick),
+        "only": names,
+        "started": time.strftime("%Y-%m-%dT%H:%M:%SZ",
+                                 time.gmtime(suite_t0)),
+        "wall_seconds": time.time() - suite_t0,
+        "drivers": drivers,
+        "failures": failures,
+    }
+    common.ART.mkdir(parents=True, exist_ok=True)
+    (common.ART / "run_manifest.json").write_text(
+        json.dumps(manifest, indent=1, default=float))
     print(f"# summary: {ok}/{len(names)} drivers ok"
           + (f"; FAILED: {', '.join(failures)}" if failures else ""),
           flush=True)

@@ -30,6 +30,7 @@ the gate fields).
 """
 from __future__ import annotations
 
+import json
 import time
 
 from . import common
@@ -37,7 +38,8 @@ from repro.core import (CostConfig, MachineConfig, PolicyConfig,
                         TieredMemSimulator, TraceSpec, sweep_compile_count,
                         FIRST_TOUCH, INTERLEAVE, PT_BIND_ALL, PT_BIND_HIGH,
                         PT_FOLLOW_DATA)
-from repro.obs.inject import FaultInjector, fail_once, fail_rate
+from repro.obs import FlightRecorder, validate_postmortem
+from repro.obs.inject import FaultInjector, fail_lane, fail_once, fail_rate
 from repro.service import ResilienceConfig, ServiceError, SimBroker, SimQuery
 
 SERVICE_WORKLOADS = ("memcached", "xsbench", "btree", "bfs")
@@ -168,16 +170,21 @@ def main(quick: bool = False):
          f"qps={n / cached_s:.1f};recompiles={cached_recompiles}"),
     ]
     common.emit(rows)
-    common.save_artifact("service_throughput", results)
+    common.emit_record("service_throughput", results, rows=rows, quick=quick)
     return results
 
 
 def chaos_main(quick: bool = False):
-    """Chaos mode: burst traffic under a seeded 1% device-fault rate.
+    """Chaos mode: burst traffic under a seeded fault plan — one
+    guaranteed transient hiccup, a 1% background device-fault rate, and
+    one *persistently poisoned lane* that the broker must bisect out,
+    quarantine, and document with a flight-recorder postmortem.
 
-    The gates are liveness, not speed: every future terminates (result
-    or typed error), nothing is stranded or leaked, the broker ends
-    non-degraded, and the bounded-retry path demonstrably fired.
+    The gates are liveness and observability, not speed: every future
+    terminates (result or typed error), nothing is stranded or leaked,
+    the broker ends non-degraded, the bounded-retry path demonstrably
+    fired, and the confirmed poison produced a schema-valid postmortem
+    artifact under ``artifacts/postmortem/``.
     """
     mc = service_machine()
     policies = four_policies()
@@ -187,20 +194,28 @@ def chaos_main(quick: bool = False):
         fail_once("sweep.device"),                  # guaranteed hiccup
         fail_rate("sweep.device", 0.01, seed=42),   # 1% background rate
     ])
+    flight = FlightRecorder(tel, common.ART.parent / "postmortem")
     broker = SimBroker(
         max_lanes=4 if quick else 64, lane_sharding="auto", telemetry=tel,
-        injector=injector,
+        injector=injector, flight=flight,
         resilience=ResilienceConfig(max_retries=3, backoff_base=0.005))
+
+    def burst(b: int):
+        if quick:
+            return burst_queries(mc, 2, policies[:2], run_steps=56,
+                                 seed0=1000 * (b + 1))
+        return burst_queries(mc, 16, policies, seed0=1000 * (b + 1))
+
+    # the seeded poison: burst 0's first lane fails *persistently*
+    # (transient=False — no retry escape), forcing the full isolation
+    # path: bisection -> solo failure -> quarantine -> postmortem dump
+    poison_digest = broker.query_digest(burst(0)[0])
+    injector.add(fail_lane("sweep.device", poison_digest, transient=False))
 
     t0 = time.time()
     futs = []
     for b in range(n_bursts):           # fresh trace content every burst
-        if quick:
-            futs += broker.submit_many(burst_queries(
-                mc, 2, policies[:2], run_steps=56, seed0=1000 * (b + 1)))
-        else:
-            futs += broker.submit_many(burst_queries(
-                mc, 16, policies, seed0=1000 * (b + 1)))
+        futs += broker.submit_many(burst(b))
         broker.drain()
     secs = time.time() - t0
     n = len(futs)
@@ -221,6 +236,19 @@ def chaos_main(quick: bool = False):
         "broker still degraded after fault-free drain"
     assert broker.stats.retries >= 1, \
         "fault plan never exercised the retry path"
+    assert failed.get("PoisonedQueryError", 0) >= 1, \
+        f"seeded poison lane never confirmed: {failed}"
+
+    # the poison's postmortem: at least one dump, schema-valid, carrying
+    # recent spans, a metrics delta, and the quarantined lane digest
+    assert flight.dumps, "no postmortem produced for the poisoned lane"
+    pm = json.loads(flight.dumps[0].read_text())
+    pm_problems = validate_postmortem(pm)
+    assert not pm_problems, f"postmortem schema problems: {pm_problems}"
+    assert len(pm["spans"]) >= 1, "postmortem carries no spans"
+    assert pm["metrics_delta"], "postmortem carries no metrics delta"
+    assert poison_digest in pm["state"].get("quarantine", []), \
+        "postmortem state is missing the quarantined digest"
 
     results = {
         "n_queries": n, "bursts": n_bursts, "seconds": secs,
@@ -228,15 +256,21 @@ def chaos_main(quick: bool = False):
         "gates": {"stranded": len(stranded), "resolved": resolved,
                   "typed_failures": failed,
                   "degraded_buckets": broker.degraded_buckets(),
-                  "retries": broker.stats.retries},
+                  "degraded": len(broker.degraded_buckets()),
+                  "retries": broker.stats.retries,
+                  "quarantined": broker.stats.quarantined,
+                  "postmortems": len(flight.dumps)},
+        "poison_digest": poison_digest,
+        "postmortems": [str(p) for p in flight.dumps],
         "faults": injector.stats(),
         "snapshot": broker.snapshot(),
     }
-    common.emit([(f"service_chaos/{n}q", secs,
-                  f"qps={n / secs:.1f};retries={broker.stats.retries};"
-                  f"injected={results['faults']['total_injected']};"
-                  f"stranded=0")])
-    common.save_artifact("chaos", results)
+    rows = [(f"service_chaos/{n}q", secs,
+             f"qps={n / secs:.1f};retries={broker.stats.retries};"
+             f"injected={results['faults']['total_injected']};"
+             f"postmortems={len(flight.dumps)};stranded=0")]
+    common.emit(rows)
+    common.emit_record("chaos", results, rows=rows, quick=quick)
     return results
 
 

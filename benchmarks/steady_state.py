@@ -83,7 +83,7 @@ def main(quick: bool = False):
     # fast-vs-event window classification + device-time histograms for
     # the measured runs, alongside the headline numbers
     results["telemetry"] = common.telemetry().snapshot()
-    common.save_artifact("steady_state", results)
+    common.emit_record("steady_state", results, rows=rows, quick=quick)
     return results
 
 

@@ -53,7 +53,7 @@ def main(quick: bool = False):
                      f"paper(total={p['total']}%,walk={p['walk']}%,"
                      f"stall={p['stall']}%)"))
     common.emit(rows)
-    common.save_artifact("table4_summary", summary)
+    common.emit_record("table4_summary", summary, rows=rows, quick=quick)
     return summary
 
 

@@ -13,25 +13,47 @@ Three layers:
     one attribute load per hook when observability is off, and the
     compiled engines stay bitwise-identical either way.
 
-``python -m repro.obs.validate trace.json`` checks an exported trace is
-well-formed, balanced ``trace_event`` JSON (the CI telemetry smoke).
+``python -m repro.obs.validate <artifact.json ...>`` schema-checks
+exported artifacts — Perfetto traces, ``history.jsonl`` BenchRecord
+logs, postmortem dumps — and is what CI gates on.
 
-A fourth layer rides alongside: :mod:`repro.obs.inject`, a deterministic
-fault-injection harness (named sites, seeded schedule-reproducible
-failure plans) that the service layer's resilience machinery is chaos-
-tested against.  Like telemetry, its default is a no-op singleton.
+Two layers ride alongside:
+
+  * :mod:`repro.obs.inject` — a deterministic fault-injection harness
+    (named sites, seeded schedule-reproducible failure plans) that the
+    service layer's resilience machinery is chaos-tested against.  Like
+    telemetry, its default is a no-op singleton.
+  * :mod:`repro.obs.bench` + :mod:`repro.obs.report` — the perf
+    observatory: every benchmark driver emits a fingerprinted
+    :data:`BenchRecord <repro.obs.bench.RECORD_SCHEMA>` into
+    ``artifacts/bench/history.jsonl``, and ``python -m repro.obs.report
+    --check`` gates the trajectory against committed per-namespace
+    baselines.  :class:`FlightRecorder` dumps a postmortem (recent
+    spans + metrics delta + broker state) on persistent service
+    failures.
 """
+from .bench import (RECORD_SCHEMA, append_record, fingerprint,
+                    flatten_metrics, load_history, make_record,
+                    namespace_of, next_run_id, validate_record)
 from .inject import (FaultInjector, FaultRule, InjectedFault, NULL_INJECTOR,
                      NullInjector, fail_lane, fail_n, fail_once, fail_rate,
                      or_null_injector)
-from .metrics import Counter, Gauge, Histogram, MetricsRegistry
-from .telemetry import NULL, NullTelemetry, Telemetry, or_null
+from .metrics import (Counter, Gauge, Histogram, MetricsRegistry, merge,
+                      quantile_from_snapshot)
+from .telemetry import (FlightRecorder, NULL, NullTelemetry,
+                        POSTMORTEM_SCHEMA, Telemetry, or_null,
+                        validate_postmortem)
 from .tracing import SpanRecorder, validate_trace_events
 
 __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "merge", "quantile_from_snapshot",
     "NULL", "NullTelemetry", "Telemetry", "or_null",
+    "FlightRecorder", "POSTMORTEM_SCHEMA", "validate_postmortem",
     "SpanRecorder", "validate_trace_events",
+    "RECORD_SCHEMA", "append_record", "fingerprint", "flatten_metrics",
+    "load_history", "make_record", "namespace_of", "next_run_id",
+    "validate_record",
     "FaultInjector", "FaultRule", "InjectedFault", "NULL_INJECTOR",
     "NullInjector", "fail_lane", "fail_n", "fail_once", "fail_rate",
     "or_null_injector",

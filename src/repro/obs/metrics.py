@@ -29,6 +29,7 @@ property the ROADMAP's fleet-wide metrics item needs.
 """
 from __future__ import annotations
 
+import json
 import math
 from typing import Dict, Optional, Tuple
 
@@ -128,12 +129,100 @@ class Histogram:
             out["min"] = self.min
             out["max"] = self.max
             out["mean"] = self.total / self.count
+            # bucket geometry rides along so quantile_from_snapshot /
+            # merge can reconstruct edges from the snapshot alone (only
+            # when non-empty: the empty shape is pinned by tests and
+            # carries no information)
+            out["lo"] = self.lo
+            out["base"] = self.base
         # sparse: only non-empty buckets, keyed by their upper bound
         out["buckets"] = {
             ("inf" if math.isinf(self.bucket_le(i)) else
              f"{self.bucket_le(i):.9g}"): n
             for i, n in enumerate(self.buckets) if n}
         return out
+
+    def quantile(self, q: float) -> Optional[float]:
+        """Estimated q-quantile (0 <= q <= 1) by log-bucket
+        interpolation; exact to within one bucket width.  None when
+        empty."""
+        return quantile_from_snapshot(self.snapshot(), q)
+
+
+def merge(snapshot_a: Dict[str, object],
+          snapshot_b: Dict[str, object]) -> Dict[str, object]:
+    """Merge two Histogram snapshots bucket-by-bucket.
+
+    Fixed boundaries make this exact: the merged snapshot is identical
+    (up to float summation) to observing both streams into one
+    histogram — the property the ROADMAP's fleet-wide metrics item
+    needs, and what the report uses to aggregate per-driver latency
+    histograms across history records.
+    """
+    if not snapshot_a.get("count"):
+        return json.loads(json.dumps(snapshot_b))
+    if not snapshot_b.get("count"):
+        return json.loads(json.dumps(snapshot_a))
+    for field in ("lo", "base"):
+        av, bv = snapshot_a.get(field), snapshot_b.get(field)
+        if av is not None and bv is not None and av != bv:
+            raise ValueError(
+                f"cannot merge histograms with different {field}: "
+                f"{av} vs {bv}")
+    out = {
+        "count": snapshot_a["count"] + snapshot_b["count"],
+        "sum": snapshot_a["sum"] + snapshot_b["sum"],
+        "min": min(snapshot_a["min"], snapshot_b["min"]),
+        "max": max(snapshot_a["max"], snapshot_b["max"]),
+    }
+    out["mean"] = out["sum"] / out["count"]
+    for field in ("lo", "base"):
+        v = snapshot_a.get(field, snapshot_b.get(field))
+        if v is not None:
+            out[field] = v
+    buckets: Dict[str, int] = dict(snapshot_a.get("buckets", {}))
+    for ub, n in snapshot_b.get("buckets", {}).items():
+        buckets[ub] = buckets.get(ub, 0) + n
+    out["buckets"] = buckets
+    return out
+
+
+def quantile_from_snapshot(snapshot: Dict[str, object],
+                           q: float) -> Optional[float]:
+    """q-quantile (0 <= q <= 1) of a Histogram snapshot.
+
+    Walks the sparse buckets in boundary order to the target rank, then
+    interpolates geometrically within the bucket (log-scale buckets ⇒
+    log-space interpolation), clamping to the observed [min, max].  The
+    estimate is exact to within one bucket width of the true quantile.
+    """
+    if not 0.0 <= q <= 1.0:
+        raise ValueError(f"quantile must be in [0, 1], got {q}")
+    count = snapshot.get("count", 0)
+    if not count:
+        return None
+    lo = float(snapshot.get("lo", 1e-6))
+    base = float(snapshot.get("base", 2.0))
+    obs_min = float(snapshot.get("min", lo))
+    obs_max = float(snapshot.get("max", obs_min))
+    buckets = sorted(
+        ((math.inf if ub == "inf" else float(ub), int(n))
+         for ub, n in snapshot.get("buckets", {}).items()),
+        key=lambda t: t[0])
+    rank = min(max(int(math.ceil(q * count)), 1), count)
+    cum = 0
+    for ub, n in buckets:
+        if cum + n < rank:
+            cum += n
+            continue
+        if math.isinf(ub):          # overflow bucket: no finite edges
+            return obs_max
+        hi_edge = ub
+        lo_edge = ub / base
+        frac = (rank - cum) / n
+        val = lo_edge * (hi_edge / lo_edge) ** frac
+        return min(max(val, obs_min), obs_max)
+    return obs_max
 
 
 class MetricsRegistry:

@@ -24,9 +24,10 @@ asserts the blocked engine's outputs exactly).
 """
 from __future__ import annotations
 
+import json
 import time
-from contextlib import contextmanager
-from typing import Dict, Optional
+from pathlib import Path
+from typing import Dict, List, Optional
 
 from .metrics import Counter, Gauge, Histogram, MetricsRegistry
 from .tracing import SpanRecorder
@@ -201,3 +202,135 @@ NULL = NullTelemetry()
 def or_null(telemetry: Optional[Telemetry]) -> Telemetry:
     """The one canonicalization every instrumented call site uses."""
     return telemetry if telemetry is not None else NULL
+
+
+# ---------------------------------------------------------------------------
+# The failure flight recorder.
+# ---------------------------------------------------------------------------
+POSTMORTEM_SCHEMA = "postmortem/v1"
+
+
+class FlightRecorder:
+    """A black box for persistent service failures.
+
+    Rides alongside a :class:`Telemetry`: when the broker confirms a
+    poisoned lane, trips a circuit breaker or abandons a livelocked
+    bucket, it calls :meth:`dump`, which writes a self-contained
+    postmortem JSON to ``<out_dir>/<ts>_<site>.json`` containing
+
+      * the bounded ring of recently *completed* spans (the tracer's
+        ``recent`` deque — newest events survive even after the main
+        event list saturates),
+      * a metrics **delta** since the last mark (construction or the
+        previous dump): every counter/gauge that moved, histograms by
+        their observation count,
+      * the caller-supplied ``state`` dict (the broker passes its stats,
+        quarantine digests, degraded buckets and injector totals) and
+        the typed error (with its lane digest when it carries one).
+
+    So a chaos failure in CI arrives with its own story instead of a
+    bare counter.  Dumps are best-effort by contract: callers wrap them
+    so a postmortem write can never take down the service path itself.
+    """
+
+    def __init__(self, telemetry, out_dir, max_spans: int = 64,
+                 clock=time.time):
+        self.telemetry = or_null(telemetry)
+        self.out_dir = Path(out_dir)
+        self.max_spans = int(max_spans)
+        self.clock = clock
+        self.dumps: List[Path] = []
+        self._baseline = self._numeric_metrics()
+
+    def _numeric_metrics(self) -> Dict[str, float]:
+        if not self.telemetry.enabled:
+            return {}
+        out: Dict[str, float] = {}
+        for k, v in self.telemetry.metrics.snapshot().items():
+            if isinstance(v, dict):             # histogram -> obs count
+                v = v.get("count", 0)
+            if isinstance(v, bool) or not isinstance(v, (int, float)):
+                continue
+            out[k] = float(v)
+        return out
+
+    def mark(self) -> None:
+        """Reset the metrics-delta baseline (done after every dump)."""
+        self._baseline = self._numeric_metrics()
+
+    def metrics_delta(self) -> Dict[str, float]:
+        now = self._numeric_metrics()
+        delta = {k: v - self._baseline.get(k, 0.0)
+                 for k, v in now.items() if v != self._baseline.get(k, 0.0)}
+        return delta
+
+    def recent_spans(self) -> List[dict]:
+        tr = self.telemetry.tracer
+        if tr is None:
+            return []
+        ring = getattr(tr, "recent", None)
+        events = list(ring) if ring is not None else list(tr.events)
+        return [e for e in events if e.get("ph") == "X"][-self.max_spans:]
+
+    def dump(self, site: str, error: Optional[BaseException] = None,
+             state: Optional[Dict] = None) -> Path:
+        ts = float(self.clock())
+        obj: Dict[str, object] = {
+            "schema": POSTMORTEM_SCHEMA,
+            "ts": ts,
+            "time": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime(ts)),
+            "site": str(site),
+            "spans": self.recent_spans(),
+            "metrics_delta": self.metrics_delta(),
+            "state": state or {},
+        }
+        if error is not None:
+            err: Dict[str, object] = {"type": type(error).__name__,
+                                      "message": str(error)}
+            digest = getattr(error, "digest", None)
+            if digest is not None:
+                err["digest"] = digest
+            if error.__cause__ is not None:
+                err["cause"] = (f"{type(error.__cause__).__name__}: "
+                                f"{error.__cause__}")
+            obj["error"] = err
+        self.out_dir.mkdir(parents=True, exist_ok=True)
+        stamp = time.strftime("%Y%m%dT%H%M%S", time.gmtime(ts))
+        slug = "".join(c if c.isalnum() or c in "._-" else "-"
+                       for c in str(site))
+        path = self.out_dir / f"{stamp}_{slug}.json"
+        n = 1
+        while path.exists():                    # same-second collisions
+            path = self.out_dir / f"{stamp}_{slug}.{n}.json"
+            n += 1
+        path.write_text(json.dumps(obj, indent=1, default=float))
+        self.dumps.append(path)
+        self.mark()
+        return path
+
+
+def validate_postmortem(obj) -> List[str]:
+    """Schema check for one postmortem JSON; returns problems."""
+    problems: List[str] = []
+    if not isinstance(obj, dict):
+        return ["postmortem is not an object"]
+    if obj.get("schema") != POSTMORTEM_SCHEMA:
+        problems.append(f"schema is {obj.get('schema')!r}, "
+                        f"expected {POSTMORTEM_SCHEMA!r}")
+    for field, kind in (("ts", (int, float)), ("time", str),
+                        ("site", str), ("spans", list),
+                        ("metrics_delta", dict), ("state", dict)):
+        if not isinstance(obj.get(field), kind):
+            problems.append(f"field {field!r} missing or not "
+                            f"{getattr(kind, '__name__', kind)}")
+    if isinstance(obj.get("spans"), list):
+        for i, e in enumerate(obj["spans"]):
+            if not isinstance(e, dict) or e.get("ph") != "X" \
+                    or not isinstance(e.get("name"), str):
+                problems.append(f"spans[{i}] is not a complete (X) span")
+                break
+    err = obj.get("error")
+    if err is not None and (not isinstance(err, dict)
+                            or not isinstance(err.get("type"), str)):
+        problems.append("error present but malformed (needs type/message)")
+    return problems

@@ -184,6 +184,13 @@ class SimBroker:
                    armed over the ``broker.flush`` / ``sweep.device``
                    sites here and propagated to the cache's disk sites.
                    Defaults to the no-op injector.
+    flight         optional :class:`~repro.obs.FlightRecorder`: every
+                   *persistent* failure — poison confirmed, breaker
+                   trip, livelock abandon — dumps a postmortem artifact
+                   (recent spans, metrics delta, broker state) before
+                   the futures settle.  Dumps are best-effort: a
+                   recorder error increments ``broker.flight_errors``
+                   and never disturbs settlement.
     sleep          injectable backoff sleep (tests pass a recorder).
     """
 
@@ -191,7 +198,7 @@ class SimBroker:
                  lane_sharding=None, pad_steps_floor: int = 64,
                  cache: Optional[ResultCache] = None, clock=time.monotonic,
                  telemetry=None, resilience: Optional[ResilienceConfig] = None,
-                 injector=None, sleep=time.sleep):
+                 injector=None, flight=None, sleep=time.sleep):
         if max_lanes < 1:
             raise ValueError("max_lanes must be >= 1")
         self.max_lanes = max_lanes
@@ -212,10 +219,16 @@ class SimBroker:
         self.quarantine = Quarantine(self.resilience.quarantine_ttl)
         self.breaker = CircuitBreaker(self.resilience.breaker_threshold,
                                       self.resilience.breaker_recovery)
+        self.flight = flight
         self.stats = BrokerStats()
         # bucket key -> (cache key -> pending lane), insertion-ordered
         self._buckets: Dict[Tuple, Dict[Tuple, _Pending]] = {}
         self._fut_index: Dict[int, Tuple[Tuple, Tuple]] = {}
+        # bucket key -> stable trace tid for its queue-wait spans (tid 0
+        # is the broker's own track, tid 1 the engine's window track;
+        # per-bucket tracks keep concurrent buckets' queue spans from
+        # partially overlapping on one line)
+        self._bucket_tids: Dict[Tuple, int] = {}
 
     # ------------------------------------------------------------------
     # admission
@@ -434,6 +447,7 @@ class SimBroker:
             n += len(p.futures)
             self._settle_lane(p, error=err)
         self.telemetry.counter("broker.abandoned_futures").inc(n)
+        self._flight_dump("broker.abandon", err, bucket=_bucket_label(bk))
 
     def pending_lanes(self) -> int:
         return sum(len(b) for b in self._buckets.values())
@@ -502,6 +516,7 @@ class SimBroker:
                 qwait.observe(max(now - p.enqueue_t, 0.0))
                 if p.admit_t is not None and flush_t0 is not None:
                     tel.add_span("query.queue", p.admit_t, flush_t0,
+                                 tid=self._bucket_tid(bkey),
                                  args={"bucket": blabel,
                                        "waiters": len(p.futures)})
 
@@ -556,8 +571,11 @@ class SimBroker:
         try:
             results = self._run_with_retries(bkey, live, blabel)
         except Exception as exc:  # noqa: BLE001 — typed handling below
+            was_open = self.breaker.is_open(bkey)
             self.breaker.record_failure(bkey)
             self._update_degraded_gauge()
+            if not was_open and self.breaker.is_open(bkey):
+                self._flight_dump("broker.breaker", exc, bucket=blabel)
             if len(live) == 1:
                 self._poison(live[0], exc)
             else:
@@ -644,8 +662,33 @@ class SimBroker:
         self.quarantine.add(digest, self.clock())
         self.stats.quarantined += 1
         self.telemetry.counter("broker.quarantined").inc()
-        self._settle_lane(pend, error=PoisonedQueryError(digest,
-                                                         cause=cause))
+        err = PoisonedQueryError(digest, cause=cause)
+        self._settle_lane(pend, error=err)
+        self._flight_dump("broker.poison", err)
+
+    def _bucket_tid(self, bkey: Tuple) -> int:
+        tid = self._bucket_tids.get(bkey)
+        if tid is None:
+            tid = self._bucket_tids[bkey] = 2 + len(self._bucket_tids)
+        return tid
+
+    def _flight_dump(self, site: str, error: BaseException, **extra) -> None:
+        """Best-effort postmortem on a persistent failure.  Never raises:
+        the black box must not be able to crash the plane."""
+        if self.flight is None:
+            return
+        try:
+            state: Dict[str, object] = {
+                "stats": self.stats.as_dict(),
+                "pending_lanes": self.pending_lanes(),
+                "quarantine": self.quarantine.digests(),
+                "degraded_buckets": self.degraded_buckets()}
+            if self.injector.rules:
+                state["faults"] = self.injector.stats()
+            state.update(extra)
+            self.flight.dump(site, error=error, state=state)
+        except Exception:  # noqa: BLE001 — observability stays best-effort
+            self.telemetry.counter("broker.flight_errors").inc()
 
     def _update_degraded_gauge(self) -> None:
         self.telemetry.gauge("broker.degraded").set(
