@@ -88,6 +88,51 @@ def _rank_key(count: jax.Array, idx_bits: int) -> jax.Array:
     return (jnp.clip(count, 0, 255) << idx_bits) | (n - 1 - idx)
 
 
+def _top_k_ranked(key: jax.Array, B: int, idx_bits: int) -> jax.Array:
+    """Bit-exact replacement for ``jax.lax.top_k(key, B)[1]`` on
+    ``_rank_key`` keys.
+
+    XLA's CPU ``top_k`` lowers to a full sort of the whole key array
+    (~100 ms at n=256k), which priced one migration-scan tick at ~60
+    simulated steps and capped the blocked engine's cadence win.  Rank
+    keys are structured — an 8-bit clipped count in the high bits with
+    a low-index tie-break below, invalid entries exactly -1 — so the
+    top-B falls out of a binary-searched count cutoff plus O(n)
+    elementwise passes and one B-element sort.  Exactness: keys are
+    distinct except at the shared -1, where ``top_k``'s stable tie
+    order is index order, which the cumsum selection reproduces.
+    """
+    n = key.shape[0]
+    if B <= 0:
+        return jnp.zeros((0,), I32)
+    bucket = (key >> idx_bits) + 1        # 0 invalid (-1 key), 1.. counts
+    B_t = jnp.asarray(B, I32)
+
+    # Largest v in [0, 257] with #(bucket >= v) >= B; count_ge is
+    # monotone in v and count_ge(0) = n >= B (B is clipped to n_map).
+    def half(_, lh):
+        lo, hi = lh
+        mid = (lo + hi + 1) >> 1
+        ge = jnp.sum((bucket >= mid).astype(I32)) >= B_t
+        return jnp.where(ge, mid, lo), jnp.where(ge, hi, mid - 1)
+    vstar, _ = jax.lax.fori_loop(0, 9, half,           # 2^9 > 258
+                                 (jnp.asarray(0, I32),
+                                  jnp.asarray(257, I32)))
+
+    sel_gt = bucket > vstar               # all of these are in the top-B
+    n_gt = jnp.sum(sel_gt.astype(I32))
+    eq = bucket == vstar                  # ties at the cutoff: lowest
+    sel_eq = eq & (jnp.cumsum(eq.astype(I32)) <= B_t - n_gt)  # index first
+    sel = sel_gt | sel_eq                 # exactly B elements
+    # j-th selected index (index order) = first i with cumsum(sel)[i] > j;
+    # searchsorted keeps this a handful of gathers instead of an
+    # n-update scatter (XLA CPU scatters are serial).
+    idxs = jnp.searchsorted(jnp.cumsum(sel.astype(I32)),
+                            jnp.arange(1, B + 1, dtype=I32)).astype(I32)
+    order = jnp.argsort(-jnp.take(key, idxs), stable=True)
+    return jnp.take(idxs, order)
+
+
 def autonuma_scan(st: SimState, mc: MachineConfig, cc: CostConfig,
                   pc: PolicyConfig, wm: jax.Array, budget: int,
                   va_row: jax.Array, w_row: jax.Array
@@ -140,7 +185,7 @@ def autonuma_scan(st: SimState, mc: MachineConfig, cc: CostConfig,
     hot_count = jnp.where(on_nvmm & (st.access_recent >= pc.autonuma_threshold),
                           st.access_recent, 0)
     hot_key = jnp.where(hot_count > 0, _rank_key(hot_count, idx_bits), -1)
-    _, hot_pages = jax.lax.top_k(hot_key, B)
+    hot_pages = _top_k_ranked(hot_key, B, idx_bits)
     hot_valid = jnp.take(hot_key, hot_pages) > 0
     n_hot = jnp.minimum(jnp.sum(hot_valid.astype(I32)), budget_t)
 
@@ -152,7 +197,7 @@ def autonuma_scan(st: SimState, mc: MachineConfig, cc: CostConfig,
                                st.access_recent < pc.autonuma_threshold, True)
     cold_score = jnp.where(elig, 255 - jnp.clip(st.access_recent, 0, 255), 0)
     cold_key = jnp.where(elig, _rank_key(cold_score, idx_bits), -1)
-    _, cold_pages = jax.lax.top_k(cold_key, B)
+    cold_pages = _top_k_ranked(cold_key, B, idx_bits)
     cold_valid = jnp.take(cold_key, cold_pages) >= 0
 
     excess0 = jnp.maximum(free0[0] - wm[0], 0)

@@ -65,19 +65,25 @@ scan-free stretches — used to pay the full per-step scan machinery (big
 placement/counter state threaded through every iteration, the three
 ``lax.cond`` dispatches, fifteen per-step timeline reductions).  The
 blocked engine tiles the trace into fixed ``[block, T]`` step-windows
-(window count ``ceil(S / block)`` depends only on the trace *shape*, so
-compiled programs keep quantizing across trace contents — the property
-the service broker's shape buckets rely on).  A window containing any
-event step (segment free, AutoNUMA tick, or a fault on any lane of a
-sweep) replays the exact per-step path row by row; an event-free window
-runs as ONE outer-scan step: only the genuinely sequential state — the
-four TLB/PWC arrays, the per-thread cycle accumulators and three hit
-counters — threads through a tiny inner scan over the window's rows,
-while placement gathers, Bernoulli draws and cost terms are precomputed
-vectorized over the whole ``[block, T]`` tile and everything heavy
-(access-bit scatter, counters, the big state carry, timeline reductions)
-commits once per window.  The inner scan replays the per-step f32
-expression tree in the per-step order, so the blocked engine is
+(window count ``ceil(S / block)`` depends only on the trace *shape*) and
+host-classifies each window from the schedule's exact event rows
+(:func:`plan_windows`): event-free windows run as ONE outer-scan step
+through :func:`_build_fast_window` — only the genuinely sequential
+state (the four TLB/PWC arrays, per-thread cycle accumulators, three
+hit counters) threads through a tiny inner scan while placement
+gathers, Bernoulli draws and cost terms are precomputed vectorized over
+the whole tile; a window whose only event is a single AutoNUMA/TPP scan
+tick runs as fast-prefix -> hoisted scan op -> fast-suffix with *zero*
+per-step rows (so a ``period=512, block=64`` cadence no longer demotes
+one window in eight to per-step replay); a window with a narrow event
+span runs fast prefix/suffix around a per-step replay of just the span;
+only wide spans replay the whole window per-step.  Segment capacities
+are quantized to per-class pow2 maxima and folded into the compile key
+(``WindowPlan.geom``) with live lengths as traced data, so compiled
+programs keep quantizing across trace contents — the property the
+service broker's shape buckets rely on — and an all-fast program
+compiles no per-step body at all.  Every branch replays the per-step
+f32 expression tree in the per-step order, so the blocked engine is
 **bit-identical** to the retained per-step path (``engine="per_step"``)
 — cycles included, not just to rounding — which ``tests/test_blocked.py``
 asserts exactly.
@@ -388,6 +394,36 @@ TIMELINE_KEYS = ("total_cycles", "walk_cycles", "stall_cycles", "faults",
                  "dram_free", "leaf_nvmm", "leaf_dram", "walks",
                  "data_migrations", "l4_mig_success", "migration_cycles",
                  "data_mem_cycles", "fault_cycles", "l1_hits", "stlb_hits")
+
+
+def _build_scan_op(mc: MachineConfig, budget: int):
+    """Build the standalone migration scan-tick operator.
+
+    One AutoNUMA/TPP/Nomad periodic scan plus its cycle accounting,
+    factored out of the per-step body so the blocked engine's *hoist*
+    windows can run it between two fast segments without compiling any
+    per-step machinery.  ``autonuma_scan`` self-gates on
+    ``pc.autonuma & ~oom_killed``, so a shared schedule can fire for
+    every lane of a mixed sweep.  The tick step's access row rides along
+    as Nomad's concurrent-write abort condition (a no-op input for the
+    other families).  The f32 accounting order is exactly the per-step
+    path's, keeping hoisted ticks bit-identical to replayed ones.
+    """
+    T = mc.n_threads
+    wm = alloc_mod.watermark_pages(mc)
+
+    def scan_op(st: SimState, cc: CostConfig, pc: PolicyConfig,
+                va_row, w_row) -> SimState:
+        s2, cost = migrate_mod.autonuma_scan(st, mc, cc, pc, wm, budget,
+                                             va_row, w_row)
+        cyc = dataclasses.replace(
+            s2.cycles,
+            total=s2.cycles.total
+            + cost * jnp.asarray(cc.mig_cost_scale, F32) / T,
+            migration=s2.cycles.migration + cost)
+        return dataclasses.replace(s2, cycles=cyc)
+
+    return scan_op
 
 
 def _build_step(mc: MachineConfig, budget: int, phase_b: str = "batched",
@@ -853,6 +889,8 @@ def _build_step(mc: MachineConfig, budget: int, phase_b: str = "batched",
     # lax.conds keep actually skipping work in a batched policy sweep; the
     # per-thread fault schedule row (``sched_row``, fault_schedule bits)
     # rides along as ordinary masked data.
+    scan_op = _build_scan_op(mc, budget)
+
     def step(st: SimState, cc: CostConfig, pc: PolicyConfig, x,
              seg_of_map, seg_of_leaf):
         va_row, w_row, fid, llc_rate, sched_row, do_free, do_scan, \
@@ -860,20 +898,9 @@ def _build_step(mc: MachineConfig, budget: int, phase_b: str = "batched",
         st = jax.lax.cond(do_free,
                           lambda s: free_segment(s, fid, seg_of_map, seg_of_leaf),
                           lambda s: s, st)
-
-        def scan_fn(s):
-            # autonuma_scan self-gates on pc.autonuma & ~oom_killed, so the
-            # shared schedule can fire for every lane of a mixed sweep.
-            # The step's access row rides along as Nomad's concurrent-write
-            # abort condition (a no-op input for the other families).
-            s2, cost = migrate_mod.autonuma_scan(s, mc, cc, pc, wm, budget,
-                                                 va_row, w_row)
-            cyc = dataclasses.replace(
-                s2.cycles,
-                total=s2.cycles.total + cost * f32(cc.mig_cost_scale) / T,
-                migration=s2.cycles.migration + cost)
-            return dataclasses.replace(s2, cycles=cyc)
-        st = jax.lax.cond(do_scan, scan_fn, lambda s: s, st)
+        st = jax.lax.cond(do_scan,
+                          lambda s: scan_op(s, cc, pc, va_row, w_row),
+                          lambda s: s, st)
 
         st, fault_mask = phase_a(st, cc, va_row, w_row, llc_rate)
 
@@ -1086,52 +1113,267 @@ def _build_fast_window(mc: MachineConfig):
     return fast_window
 
 
+def _geom_out_rows(geom, block: int) -> int:
+    """Rows each compiled window emits (``R_out``): every branch of a
+    geometry pads its concatenated segment outputs to one shared width so
+    ``lax.switch`` arms agree on shapes."""
+    r = block
+    if geom is not None:
+        _, hoist, split = geom
+        if hoist is not None:
+            r = max(r, hoist[0] + hoist[1])
+        if split is not None:
+            r = max(r, split[0] + split[1] + split[2])
+    return r
+
+
+def _geom_rows_in(geom, block: int) -> int:
+    """Host row-padding of each window's input tile.  The hoist/split
+    branches carve segments with ``dynamic_slice`` at traced offsets;
+    slices must never clamp (clamping would misalign rows) and must never
+    read the next window's rows, so each window is padded independently
+    to ``2 * block`` rows whenever such a branch exists."""
+    if geom is not None and (geom[1] is not None or geom[2] is not None):
+        return 2 * block
+    return block
+
+
+def _normalize_blocked(budget: int, phase_b: str, group: Optional[int],
+                       geom):
+    """Canonicalize compile-key components a blocked geometry provably
+    never feeds into the compiled program, so distinct callers share one
+    executable: without a full/split branch no per-step body is built
+    (the phase-B engine choice and allocator group bound are dead), and
+    without any scan-capable branch the AutoNUMA candidate bound is dead
+    too."""
+    needs_step = geom is not None and (bool(geom[0]) or geom[2] is not None)
+    needs_scan = needs_step or (geom is not None and geom[1] is not None)
+    if not needs_step:
+        phase_b, group = "batched", None
+    if not needs_scan:
+        budget = 0
+    return budget, phase_b, group
+
+
+def _build_blocked_body(mc: MachineConfig, budget: int, phase_b: str,
+                        group: Optional[int], block: int, geom,
+                        lanes: bool):
+    """Build the per-window body of the time-blocked engine, shared by
+    the solo runner (``_compiled_run``) and the lane sweep
+    (``sweep._sweep_runner``, ``lanes=True``).
+
+    ``geom`` is the host-quantized split geometry from
+    :func:`plan_windows` — ``None`` (every window is fast: the compiled
+    program contains no dispatch, no per-step body and no scan op at
+    all) or ``(has_full, (Ph, Qh) | None, (Ps, Es, Qs) | None)``.  The
+    body dispatches over at most four window kinds via ``lax.switch``
+    (the kind index is host data shared by every lane, so the branch
+    survives a vmapped sweep):
+
+      fast    the whole window as one ``fast_window`` call;
+      full    whole-window per-step replay (wide event spans, and
+              partial tail windows with faults);
+      hoist   fast prefix -> one hoisted scan tick -> fast suffix, with
+              *zero* per-step rows — the AutoNUMA-cadence fast path;
+      split   fast prefix -> per-step replay of the (narrow) event span
+              -> fast suffix.
+
+    Segment capacities come from ``geom``; each segment's live length
+    arrives as traced offsets (``a_idx``/``b_idx``) and is enforced
+    in-body by masking ``valid`` (and ``va`` for the split span) — rows
+    beyond a live segment are exact no-ops of the same form as the
+    window pad rows, so a branch is bit-identical to replaying its
+    window per-step.  Branch outputs are zero-padded to a shared
+    ``R_out`` row count; :func:`plan_windows` emits the matching
+    ``emit_valid`` mask that maps emitted rows back to trace steps.
+    """
+    fast_window = _build_fast_window(mc)
+    has_full = bool(geom[0]) if geom is not None else False
+    hoist = geom[1] if geom is not None else None
+    split = geom[2] if geom is not None else None
+    needs_step = has_full or split is not None
+    step = _build_step(mc, budget, phase_b, group) if needs_step else None
+    scan_op = _build_scan_op(mc, budget) if hoist is not None else None
+    r_out = _geom_out_rows(geom, block)
+
+    if lanes:
+        def run_fast(s, cc, va, wr, llc, vl):
+            def lane(st1, cc1, va1, w1, llc1):
+                return fast_window(st1, cc1, va1, w1, llc1, vl)
+            st2, outs = jax.vmap(lane, in_axes=(0, 0, 1, 1, 1))(
+                s, cc, va, wr, llc)
+            # back to rows-major [rows, L] so the flattened timeline
+            # keeps per-step semantics per lane
+            return st2, jax.tree.map(lambda a: jnp.swapaxes(a, 0, 1), outs)
+
+        def run_steps(s, cc, pc, arrs, seg_of_map, seg_of_leaf):
+            def per_step_row(s2, xr):
+                va_r, wr_r, fid_r, llc_r, sched_r, fr, sc, hf_r, vl_r = xr
+
+                def lane(st1, cc1, pc1, va1, w1, fid1, llc1, sched1,
+                         sm, sl):
+                    return step(st1, cc1, pc1,
+                                (va1, w1, fid1, llc1, sched1, fr, sc,
+                                 hf_r, vl_r), sm, sl)
+                return jax.vmap(lane)(s2, cc, pc, va_r, wr_r, fid_r,
+                                      llc_r, sched_r, seg_of_map,
+                                      seg_of_leaf)
+            return jax.lax.scan(per_step_row, s, arrs)
+
+        def run_scan(s, cc, pc, va_row, w_row):
+            return jax.vmap(scan_op)(s, cc, pc, va_row, w_row)
+    else:
+        def run_fast(s, cc, va, wr, llc, vl):
+            return fast_window(s, cc, va, wr, llc, vl)
+
+        def run_steps(s, cc, pc, arrs, seg_of_map, seg_of_leaf):
+            def per_step_row(s2, xr):
+                return step(s2, cc, pc, xr, seg_of_map, seg_of_leaf)
+            return jax.lax.scan(per_step_row, s, arrs)
+
+        def run_scan(s, cc, pc, va_row, w_row):
+            return scan_op(s, cc, pc, va_row, w_row)
+
+    def dsl(a, start, size):
+        return jax.lax.dynamic_slice_in_dim(a, start, size, axis=0)
+
+    def pad_rows(outs, have):
+        n = r_out - have
+        if n == 0:
+            return outs
+        return jax.tree.map(
+            lambda a: jnp.concatenate(
+                [a, jnp.zeros((n,) + a.shape[1:], a.dtype)]), outs)
+
+    def cat_rows(chunks):
+        if len(chunks) == 1:
+            return chunks[0]
+        return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
+                            *chunks)
+
+    def window(carry, xw, cc, pc, seg_of_map, seg_of_leaf):
+        (va_w, wr_w, fid_w, llc_w, sched_w, vl_w, df_w, ds_w, hf_w,
+         kind, a_idx, b_idx) = xw
+
+        def fast_whole(s):
+            s, o = run_fast(s, cc, va_w[:block], wr_w[:block],
+                            llc_w[:block], vl_w[:block])
+            return s, pad_rows(o, block)
+
+        branches = [fast_whole]
+
+        if has_full:
+            def full_replay(s):
+                arrs = (va_w[:block], wr_w[:block], fid_w[:block],
+                        llc_w[:block], sched_w[:block], df_w[:block],
+                        ds_w[:block], hf_w[:block], vl_w[:block])
+                s, o = run_steps(s, cc, pc, arrs, seg_of_map, seg_of_leaf)
+                return s, pad_rows(o, block)
+            branches.append(full_replay)
+
+        if hoist is not None:
+            ph, qh = hoist
+
+            def hoist_window(s):
+                chunks = []
+                if ph:
+                    pv = vl_w[:ph] & (jnp.arange(ph) < a_idx)
+                    s, o = run_fast(s, cc, va_w[:ph], wr_w[:ph],
+                                    llc_w[:ph], pv)
+                    chunks.append(o)
+                s = run_scan(s, cc, pc, jnp.take(va_w, a_idx, axis=0),
+                             jnp.take(wr_w, a_idx, axis=0))
+                if qh:
+                    s, o = run_fast(s, cc, dsl(va_w, b_idx, qh),
+                                    dsl(wr_w, b_idx, qh),
+                                    dsl(llc_w, b_idx, qh),
+                                    dsl(vl_w, b_idx, qh))
+                    chunks.append(o)
+                return s, pad_rows(cat_rows(chunks), ph + qh)
+            branches.append(hoist_window)
+
+        if split is not None:
+            ps, es, qs = split
+
+            def split_window(s):
+                chunks = []
+                if ps:
+                    pv = vl_w[:ps] & (jnp.arange(ps) < a_idx)
+                    s, o = run_fast(s, cc, va_w[:ps], wr_w[:ps],
+                                    llc_w[:ps], pv)
+                    chunks.append(o)
+                # rows of the capacity slice beyond the live span are
+                # real suffix rows: mask va to -1 and valid to False so
+                # they replay as exact no-ops here and execute once, in
+                # the fast suffix (their event masks are False already —
+                # events end at the span by construction)
+                span = jnp.arange(es) < (b_idx - a_idx)
+                va_e = jnp.where(
+                    span.reshape((es,) + (1,) * (va_w.ndim - 1)),
+                    dsl(va_w, a_idx, es), -1)
+                arrs = (va_e, dsl(wr_w, a_idx, es), dsl(fid_w, a_idx, es),
+                        dsl(llc_w, a_idx, es), dsl(sched_w, a_idx, es),
+                        dsl(df_w, a_idx, es), dsl(ds_w, a_idx, es),
+                        dsl(hf_w, a_idx, es),
+                        dsl(vl_w, a_idx, es) & span)
+                s, o = run_steps(s, cc, pc, arrs, seg_of_map, seg_of_leaf)
+                chunks.append(o)
+                if qs:
+                    s, o = run_fast(s, cc, dsl(va_w, b_idx, qs),
+                                    dsl(wr_w, b_idx, qs),
+                                    dsl(llc_w, b_idx, qs),
+                                    dsl(vl_w, b_idx, qs))
+                    chunks.append(o)
+                return s, pad_rows(cat_rows(chunks), ps + es + qs)
+            branches.append(split_window)
+
+        if len(branches) == 1:
+            return fast_whole(carry)
+        return jax.lax.switch(kind, branches, carry)
+
+    return window
+
+
 def _compiled_run(mc: MachineConfig, budget: int, phase_b: str = "batched",
                   engine: str = "blocked", block: int = DEFAULT_BLOCK,
-                  group: Optional[int] = None):
+                  group: Optional[int] = None, geom=None):
     """One jitted runner per (machine shape, AutoNUMA bound, phase-B
-    engine, execution engine, window size, allocator group bound).
+    engine, execution engine, window size, allocator group bound, split
+    geometry).
 
     Policy and cost configs are traced arguments, so every policy bundle —
     and every CostConfig variation — reuses the same compiled artifact for
-    a given trace shape.  ``engine="blocked"`` scans window tiles (the
-    time-blocked fast path with a per-step fallback on event windows);
-    ``"per_step"`` is the retained step-at-a-time reference.
+    a given trace shape.  ``engine="blocked"`` scans window tiles through
+    the kind-dispatched body of :func:`_build_blocked_body` (``geom`` is
+    the quantized split geometry from :func:`plan_windows`, part of the
+    compile key); ``"per_step"`` is the retained step-at-a-time
+    reference.  Blocked keys are normalized first: parameters a geometry
+    never compiles (phase-B engine / group without a per-step branch,
+    budget without any scan) collapse to canonical values so those
+    programs keep quantizing across trace mixes.
     """
     assert engine in ("blocked", "per_step"), engine
-    key = (mc, budget, phase_b, engine, block, group)
+    if engine == "blocked":
+        budget, phase_b, group = _normalize_blocked(budget, phase_b, group,
+                                                    geom)
+    key = (mc, budget, phase_b, engine, block, group, geom)
     if key not in _RUN_CACHE:
-        step = _build_step(mc, budget, phase_b, group)
         if engine == "per_step":
+            step = _build_step(mc, budget, phase_b, group)
+
             @jax.jit
             def run_all(st, cc, pc, xs, seg_of_map, seg_of_leaf):
                 def body(s, x):
                     return step(s, cc, pc, x, seg_of_map, seg_of_leaf)
                 return jax.lax.scan(body, st, xs)
         else:
-            fast_window = _build_fast_window(mc)
+            window = _build_blocked_body(mc, budget, phase_b, group,
+                                         block, geom, lanes=False)
 
             @jax.jit
             def run_all(st, cc, pc, xs, seg_of_map, seg_of_leaf):
                 def body(s, xw):
-                    (va_w, wr_w, fid_w, llc_w, sched_w, vl_w, df_w, ds_w,
-                     hf_w, is_ev) = xw
-
-                    def ev(s1):
-                        def per_step_row(s2, xr):
-                            return step(s2, cc, pc, xr, seg_of_map,
-                                        seg_of_leaf)
-                        return jax.lax.scan(
-                            per_step_row, s1,
-                            (va_w, wr_w, fid_w, llc_w, sched_w, df_w,
-                             ds_w, hf_w, vl_w))
-
-                    def fast(s1):
-                        return fast_window(s1, cc, va_w, wr_w, llc_w, vl_w)
-
-                    # the window-event predicate is host data shared by
-                    # every lane, so the branch survives a vmapped sweep
-                    return jax.lax.cond(is_ev, ev, fast, s)
+                    return window(s, xw, cc, pc, seg_of_map, seg_of_leaf)
                 return jax.lax.scan(body, st, xs)
 
         _RUN_CACHE[key] = run_all
@@ -1171,21 +1413,176 @@ WINDOW_PAD_FILLS = (-1, False, -1, 0.0, 0, False, False, False, False)
 
 
 def window_tiles(arrays, n_steps: int, block: int,
-                 fills=WINDOW_PAD_FILLS):
+                 fills=WINDOW_PAD_FILLS, rows_to: Optional[int] = None):
     """Idle-pad per-step host arrays to a multiple of ``block`` and tile
-    them ``[n_windows, block, ...]``.  The window count depends only on
+    them ``[n_windows, rows, ...]``.  The window count depends only on
     the step count, never the trace content — the property that keeps
-    compiled blocked programs quantizing across trace mixes."""
+    compiled blocked programs quantizing across trace mixes.  ``rows_to``
+    (``WindowPlan.rows_in``) additionally idle-pads every window's row
+    axis past ``block``: headroom for the hoist/split branches' dynamic
+    segment slices, padded *per window* so a slice never reads the next
+    window's rows."""
     n_w = -(-n_steps // block)
     pad = n_w * block - n_steps
+    rpad = (rows_to or block) - block
     out = []
     for a, fill in zip(arrays, fills):
         a = np.asarray(a)
         if pad:
             a = np.concatenate(
                 [a, np.full((pad,) + a.shape[1:], fill, a.dtype)])
-        out.append(a.reshape((n_w, block) + a.shape[1:]))
+        a = a.reshape((n_w, block) + a.shape[1:])
+        if rpad:
+            a = np.concatenate(
+                [a, np.full((n_w, rpad) + a.shape[2:], fill, a.dtype)],
+                axis=1)
+        out.append(a)
     return out
+
+
+# Semantic window kinds of the blocked engine's host classification.  The
+# compiled dispatch table only contains the kinds a geometry needs
+# ([fast] + [full][hoist][split], in that order) and ``WindowPlan.kind``
+# stores the *branch index* under that ordering — geometry lives in the
+# compile key, so dispatch table and data can never disagree.
+WIN_FAST, WIN_FULL, WIN_HOIST, WIN_SPLIT = range(4)
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowPlan:
+    """Host-side execution plan for one blocked run.
+
+    ``geom`` is the quantized split geometry (hashable; part of the
+    compile key): ``None`` when every window is fast, else
+    ``(has_full, (Ph, Qh) | None, (Ps, Es, Qs) | None)`` with pow2
+    segment capacities.  ``kind``/``seg_a``/``seg_b`` are per-window
+    device inputs (branch index, event/tick start row, suffix start
+    row); ``emit_valid`` (``[n_windows, R_out]`` bool) maps emitted
+    output rows back to trace steps in step order; ``counts`` reports
+    the semantic classification (fast, full, hoist, split) for
+    telemetry."""
+    geom: Optional[tuple]
+    kind: np.ndarray
+    seg_a: np.ndarray
+    seg_b: np.ndarray
+    emit_valid: np.ndarray
+    rows_in: int
+    block: int
+    counts: Tuple[int, int, int, int]
+
+    @property
+    def n_windows(self) -> int:
+        return len(self.kind)
+
+
+def _q2(n: int) -> int:
+    return 0 if n <= 0 else pow2ceil(int(n))
+
+
+def plan_windows(do_free, do_scan, has_fault, n_steps: int,
+                 block: int) -> WindowPlan:
+    """Classify each ``block``-step window of a trace and quantize the
+    split geometry.
+
+    The host schedule knows the exact event rows (segment frees, scan
+    ticks, faults — for a sweep, the union over lanes), so a window
+    needn't replay per-step just because it *contains* an event:
+
+      fast    no event rows at all;
+      hoist   no frees/faults and exactly one scan tick at row ``t`` —
+              runs fast[0:t), the hoisted scan op, fast[t:block);
+      split   a narrow event span (``<= block // 2``) — runs fast
+              prefix, per-step replay of the span, fast suffix;
+      full    wide spans, plus every partial tail window containing
+              fault rows: there the span end *is* the trace's last
+              faulting step, and letting trace content pick the split
+              geometry would fracture the compile-key quantization the
+              broker's shape buckets rely on.
+
+    Segment capacities are per-class maxima rounded up to powers of two
+    (``Ph``/``Qh`` hoist prefix/suffix, ``Ps``/``Es``/``Qs`` split
+    prefix/event/suffix), so traces with different event rows but the
+    same quantized geometry share one executable; live lengths travel as
+    device data (``seg_a``/``seg_b``) and are masked in-body.
+    """
+    n_w = -(-n_steps // block)
+    pad = n_w * block - n_steps
+
+    def tile(m):
+        m = np.asarray(m, bool)
+        if pad:
+            m = np.concatenate([m, np.zeros(pad, bool)])
+        return m.reshape(n_w, block)
+
+    df, ds, hf = tile(do_free), tile(do_scan), tile(has_fault)
+    vl = tile(np.ones(n_steps, bool))
+    ev = df | ds | hf
+
+    kinds = np.full(n_w, WIN_FAST, np.int32)
+    seg_a = np.zeros(n_w, np.int32)
+    seg_b = np.zeros(n_w, np.int32)
+    hoist_rows, split_rows = [], []
+    for w in range(n_w):
+        if not ev[w].any():
+            continue
+        if not (df[w] | hf[w]).any() and int(ds[w].sum()) == 1:
+            t = int(np.argmax(ds[w]))
+            kinds[w] = WIN_HOIST
+            seg_a[w] = seg_b[w] = t
+            hoist_rows.append(t)
+            continue
+        idx = np.flatnonzero(ev[w])
+        f, l = int(idx[0]), int(idx[-1])
+        if (l - f + 1) > block // 2 or (hf[w].any() and not vl[w].all()):
+            kinds[w] = WIN_FULL
+        else:
+            kinds[w] = WIN_SPLIT
+            seg_a[w], seg_b[w] = f, l + 1
+            split_rows.append((f, l - f + 1, block - 1 - l))
+
+    has_full = bool((kinds == WIN_FULL).any())
+    hoist_g = (_q2(max(hoist_rows)), _q2(block - min(hoist_rows))) \
+        if hoist_rows else None
+    split_g = (_q2(max(r[0] for r in split_rows)),
+               _q2(max(r[1] for r in split_rows)),
+               _q2(max(r[2] for r in split_rows))) if split_rows else None
+    geom = (has_full, hoist_g, split_g) \
+        if (has_full or hoist_g or split_g) else None
+
+    branch = {WIN_FAST: 0}
+    for k, present in ((WIN_FULL, has_full),
+                       (WIN_HOIST, hoist_g is not None),
+                       (WIN_SPLIT, split_g is not None)):
+        if present:
+            branch[k] = len(branch)
+    kind = np.array([branch[int(k)] for k in kinds], np.int32)
+
+    r_out = _geom_out_rows(geom, block)
+    rows_in = _geom_rows_in(geom, block)
+    emit = np.zeros((n_w, r_out), bool)
+    vlx = np.concatenate([vl, np.zeros_like(vl)], axis=1)
+    for w in range(n_w):
+        k = int(kinds[w])
+        if k in (WIN_FAST, WIN_FULL):
+            emit[w, :block] = vl[w]
+            continue
+        a, b = int(seg_a[w]), int(seg_b[w])
+        if k == WIN_HOIST:
+            ph, qh = hoist_g
+            pre = vlx[w, :ph] & (np.arange(ph) < a)
+            emit[w, :ph + qh] = np.concatenate([pre, vlx[w, b:b + qh]])
+        else:
+            ps, es, qs = split_g
+            pre = vlx[w, :ps] & (np.arange(ps) < a)
+            mid = vlx[w, a:a + es] & (np.arange(es) < (b - a))
+            emit[w, :ps + es + qs] = np.concatenate(
+                [pre, mid, vlx[w, b:b + qs]])
+    assert int(emit.sum()) == n_steps, \
+        f"window plan emits {int(emit.sum())} rows for {n_steps} steps"
+    return WindowPlan(
+        geom=geom, kind=kind, seg_a=seg_a, seg_b=seg_b, emit_valid=emit,
+        rows_in=rows_in, block=block,
+        counts=tuple(int((kinds == k).sum()) for k in range(4)))
 
 
 def blocked_xs(trace: Trace, mc: MachineConfig, pc: PolicyConfig,
@@ -1193,12 +1590,12 @@ def blocked_xs(trace: Trace, mc: MachineConfig, pc: PolicyConfig,
                sched: Optional[np.ndarray] = None):
     """Window-tiled scan inputs for the time-blocked engine.
 
-    Returns ``(xs, valid_host)``: ``xs`` carries every per-step row plus
-    the window-event predicate (``[n_windows]``, host bool — any free /
-    scan tick / fault inside the window), ``valid_host`` is the
-    ``[n_windows, block]`` bool mask mapping window rows back to trace
-    steps (idle pad rows are dropped when the per-step timeline is
-    reassembled).
+    Returns ``(xs, plan)``: ``xs`` carries every per-step row (windows
+    row-padded to ``plan.rows_in``) plus the plan's per-window branch
+    index and segment offsets; ``plan`` is the :class:`WindowPlan`
+    whose ``emit_valid`` maps the scan's ``[n_windows, R_out]`` outputs
+    back to trace steps (idle pad and capacity-slack rows are dropped
+    when the per-step timeline is reassembled).
     """
     S = trace.n_steps
     if sched is None:
@@ -1208,18 +1605,19 @@ def blocked_xs(trace: Trace, mc: MachineConfig, pc: PolicyConfig,
                              enabled=bool(pc.autonuma),
                              start_step=start_step)
     has_fault = np.asarray((sched & SCHED_DO) > 0).any(axis=1)
+    plan = plan_windows(do_free, do_scan, has_fault, S, block)
     va, wr, fid, llc, sch, vl, df, ds, hf = window_tiles(
         (trace.va.astype(np.int32), np.asarray(trace.is_write, bool),
          np.asarray(trace.free_seg, np.int32),
          np.asarray(trace.llc, np.float32), sched, np.ones((S,), bool),
          do_free, do_scan, has_fault),
-        S, block)
-    win_event = (df | ds | hf).any(axis=1)
+        S, block, rows_to=plan.rows_in)
     xs = (jnp.asarray(va), jnp.asarray(wr), jnp.asarray(fid),
           jnp.asarray(llc), jnp.asarray(sch), jnp.asarray(vl),
           jnp.asarray(df), jnp.asarray(ds), jnp.asarray(hf),
-          jnp.asarray(win_event))
-    return xs, vl
+          jnp.asarray(plan.kind), jnp.asarray(plan.seg_a),
+          jnp.asarray(plan.seg_b))
+    return xs, plan
 
 
 class TieredMemSimulator:
@@ -1287,31 +1685,34 @@ class TieredMemSimulator:
 
         if self.engine == "blocked":
             block = min(self.block, pow2ceil(trace.n_steps))
-            xs, valid = blocked_xs(trace, mc, self.pc, start_step=start,
-                                   block=block, sched=sched)
-            win_event = None
+            xs, plan = blocked_xs(trace, mc, self.pc, start_step=start,
+                                  block=block, sched=sched)
+            win_kind = None
             if tel.enabled:
-                # the host-side window classification (xs[-1]) is the
-                # fast-path vs event-window split the blocked engine ran
-                win_event = np.asarray(xs[-1])
-                n_ev = int(np.count_nonzero(win_event))
-                tel.counter("sim.windows_event").inc(n_ev)
-                tel.counter("sim.windows_fast").inc(len(win_event) - n_ev)
+                # the host-side window classification is exactly the
+                # fast/full/hoist/split dispatch the blocked engine ran
+                win_kind = plan.kind        # branch 0 == fast path
+                n_fast, _, n_hoist, n_split = plan.counts
+                tel.counter("sim.windows_event").inc(
+                    plan.n_windows - n_fast)
+                tel.counter("sim.windows_fast").inc(n_fast)
+                tel.counter("sim.windows_hoist").inc(n_hoist)
+                tel.counter("sim.windows_split").inc(n_split)
             run_all = _compiled_run(mc, budget, self.phase_b, "blocked",
-                                    block, group)
+                                    block, group, plan.geom)
             dev_t0 = tel.now()
             final, outs = run_all(st0, self.cc, self.pc, xs, seg_of_map,
                                   seg_of_leaf)
-            timeline = {k: np.asarray(v)[valid]
+            timeline = {k: np.asarray(v)[plan.emit_valid]
                         for k, v in zip(TIMELINE_KEYS, outs)}
             if dev_t0 is not None:
                 # the compiled scan is opaque: device time attributes
                 # uniformly across windows, the classification is exact
                 dev_t1 = tel.now()
-                w_dur = (dev_t1 - dev_t0) / max(len(win_event), 1)
-                for i, is_ev in enumerate(win_event):
+                w_dur = (dev_t1 - dev_t0) / max(len(win_kind), 1)
+                for i, k in enumerate(win_kind):
                     tel.add_span(
-                        "window.event" if is_ev else "window.fast",
+                        "window.event" if k else "window.fast",
                         dev_t0 + i * w_dur, dev_t0 + (i + 1) * w_dur,
                         cat="engine", tid=1, args={"window": i})
         else:

@@ -18,14 +18,19 @@ Two entry points share the engine:
     queries by trace shape flushes each bucket through one call here.
 
 Execution is time-blocked by default (``engine="blocked"``, see
-``core.sim``): the scan iterates fixed ``[block, T]`` step-windows; a
-window with no event on ANY lane (no frees, no AutoNUMA ticks, no faults
-— the union predicate, like the per-step schedule bits before it) runs as
-one vectorized fast-path step per lane, and event windows replay the
-exact per-step path row by row.  Window count and shapes depend only on
-the trace *shape*, so the compiled-program quantization the broker's
-shape buckets rely on is untouched.  ``engine="per_step"`` keeps the
-step-at-a-time reference scan.
+``core.sim``): the scan iterates fixed ``[block, T]`` step-windows,
+host-classified from the *union* event schedule over lanes (frees,
+AutoNUMA ticks, faults — union predicates, like the per-step schedule
+bits before them, so block boundaries stay lane-shared and
+policy-independent).  Event-free windows run as one vectorized
+fast-path step per lane; a window whose only event is a single scan
+tick hoists it between two fast segments; narrow event spans replay
+per-step only inside the span; wide spans replay the whole window.
+Window count depends only on the trace *shape* and the segment
+capacities are pow2-quantized into the compile key
+(``sim.plan_windows``), so the compiled-program quantization the
+broker's shape buckets rely on is untouched.  ``engine="per_step"``
+keeps the step-at-a-time reference scan.
 
 Lanes can additionally be sharded across devices (``lane_sharding`` —
 ``jax.sharding`` over the lane axis): the state pytree and every per-lane
@@ -68,17 +73,17 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from ..obs import or_null
 from .config import CostConfig, MachineConfig, PolicyConfig
 from .sim import (DEFAULT_BLOCK, RunResult, SCHED_DO, TIMELINE_KEYS, Trace,
-                  _build_fast_window, _build_step, fault_group_bound,
-                  fault_schedule, pow2ceil, scan_step_mask, seg_of_leaf_table,
-                  window_tiles)
+                  _build_blocked_body, _build_step, _normalize_blocked,
+                  fault_group_bound, fault_schedule, plan_windows, pow2ceil,
+                  scan_step_mask, seg_of_leaf_table, window_tiles)
 from .state import init_state
 
 I32 = jnp.int32
 F32 = jnp.float32
 
-# One jitted vmapped scan per (machine, budget, engines, block, group);
-# jax's jit cache then holds one executable per (lane count, trace shape,
-# lane sharding).
+# One jitted vmapped scan per (machine, budget, engines, block, group,
+# split geometry); jax's jit cache then holds one executable per (lane
+# count, trace shape, lane sharding).
 _SWEEP_CACHE: Dict[Tuple, object] = {}
 # Fallback compile accounting for jax versions without the (private)
 # jit _cache_size API: one entry per distinct compiled signature.
@@ -117,11 +122,16 @@ def _stack_leaves(objs):
 
 
 def _sweep_runner(mc: MachineConfig, budget: int, phase_b: str,
-                  engine: str, block: int, group: Optional[int]):
-    key = (mc, budget, phase_b, engine, block, group)
+                  engine: str, block: int, group: Optional[int],
+                  geom=None):
+    if engine == "blocked":
+        budget, phase_b, group = _normalize_blocked(budget, phase_b, group,
+                                                    geom)
+    key = (mc, budget, phase_b, engine, block, group, geom)
     if key not in _SWEEP_CACHE:
-        step = _build_step(mc, budget, phase_b, group)
         if engine == "per_step":
+            step = _build_step(mc, budget, phase_b, group)
+
             @jax.jit
             def run_sweep(st, cc, pc, xs, seg_of_map, seg_of_leaf):
                 def body(carry, x):
@@ -143,45 +153,17 @@ def _sweep_runner(mc: MachineConfig, budget: int, phase_b: str,
                                           seg_of_leaf)
                 return jax.lax.scan(body, st, xs)
         else:
-            fast_window = _build_fast_window(mc)
+            # the window body (kind dispatch, fast/full/hoist/split
+            # branches, lane vmaps) is shared with the solo runner —
+            # sim._build_blocked_body, lanes=True
+            window = _build_blocked_body(mc, budget, phase_b, group,
+                                         block, geom, lanes=True)
 
             @jax.jit
             def run_sweep(st, cc, pc, xs, seg_of_map, seg_of_leaf):
                 def body(carry, xw):
-                    (va_w, wr_w, fid_w, llc_w, sched_w, vl_w, df_w, ds_w,
-                     hf_w, is_ev) = xw
-
-                    def ev(s1):
-                        def per_step_row(s2, xr):
-                            va_r, wr_r, fid_r, llc_r, sched_r, fr, sc, \
-                                hf_s, vl_s = xr
-
-                            def lane(st1, cc1, pc1, va1, w1, fid1, llc1,
-                                     sched1, sm, sl):
-                                return step(st1, cc1, pc1,
-                                            (va1, w1, fid1, llc1, sched1,
-                                             fr, sc, hf_s, vl_s), sm, sl)
-                            return jax.vmap(lane)(s2, cc, pc, va_r, wr_r,
-                                                  fid_r, llc_r, sched_r,
-                                                  seg_of_map, seg_of_leaf)
-                        return jax.lax.scan(
-                            per_step_row, s1,
-                            (va_w, wr_w, fid_w, llc_w, sched_w, df_w,
-                             ds_w, hf_w, vl_w))
-
-                    def fast(s1):
-                        def lane(st1, cc1, va1, w1, llc1):
-                            return fast_window(st1, cc1, va1, w1, llc1,
-                                               vl_w)
-                        st2, outs = jax.vmap(lane, in_axes=(0, 0, 1, 1, 1))(
-                            s1, cc, va_w, wr_w, llc_w)
-                        # rows-major like the event branch: [B, L]
-                        return st2, jax.tree.map(
-                            lambda a: jnp.swapaxes(a, 0, 1), outs)
-
-                    # window-event predicate is lane-shared host data, so
-                    # the branch survives the vmapped lanes inside it
-                    return jax.lax.cond(is_ev, ev, fast, carry)
+                    return window(carry, xw, cc, pc, seg_of_map,
+                                  seg_of_leaf)
                 return jax.lax.scan(body, st, xs)
 
         _SWEEP_CACHE[key] = run_sweep
@@ -356,7 +338,7 @@ def sweep_lanes(mc: MachineConfig,
                              enabled=any(bool(p.autonuma) for p in policies))
 
     eff_block = min(int(block), pow2ceil(S))
-    valid_host = None
+    plan = None
     if engine == "per_step":
         xs = (jnp.asarray(va), jnp.asarray(wr), jnp.asarray(fid),
               jnp.asarray(llc), jnp.asarray(sched), jnp.asarray(do_free),
@@ -364,20 +346,21 @@ def sweep_lanes(mc: MachineConfig,
               jnp.ones((S,), jnp.bool_))
         lane_axis_of_x = (1, 1, 1, 1, 1, None, None, None, None)
     else:
-        # same 9-array order and pad fills as sim.blocked_xs
+        # window classification from the lane-union schedule; same
+        # 9-array order and pad fills as sim.blocked_xs
         # (WINDOW_PAD_FILLS) — pad-row semantics must match the solo path
+        plan = plan_windows(do_free, do_scan, has_fault, S, eff_block)
         va_w, wr_w, fid_w, llc_w, sched_w, vl_w, df_w, ds_w, hf_w = \
             window_tiles(
                 (va, wr, fid, llc, sched, np.ones((S,), bool), do_free,
                  do_scan, has_fault),
-                S, eff_block)
-        win_event = (df_w | ds_w | hf_w).any(axis=1)
-        valid_host = vl_w
+                S, eff_block, rows_to=plan.rows_in)
         xs = tuple(jnp.asarray(a) for a in
                    (va_w, wr_w, fid_w, llc_w, sched_w, vl_w, df_w, ds_w,
-                    hf_w, win_event))
+                    hf_w, plan.kind, plan.seg_a, plan.seg_b))
         # windowed lane arrays carry the lane axis at position 2
-        lane_axis_of_x = (2, 2, 2, 2, 2, None, None, None, None, None)
+        lane_axis_of_x = (2, 2, 2, 2, 2, None, None, None, None, None,
+                          None, None)
 
     seg_maps = np.stack([np.asarray(tr.seg_of_map, np.int32)
                          for tr in uniq_traces])
@@ -406,18 +389,25 @@ def sweep_lanes(mc: MachineConfig,
         seg_of_map = put(seg_of_map, lane_sh)
         seg_of_leaf = put(seg_of_leaf, lane_sh)
 
+    geom = plan.geom if plan is not None else None
+    sig_budget, sig_phase_b, sig_group = eff_budget, phase_b, eff_group
+    if engine == "blocked":
+        sig_budget, sig_phase_b, sig_group = _normalize_blocked(
+            eff_budget, phase_b, eff_group, geom)
     run_sweep = _sweep_runner(mc, eff_budget, phase_b, engine, eff_block,
-                              eff_group)
-    _SIGNATURES.add((mc, eff_budget, phase_b, engine, eff_block, eff_group,
-                     L, S, shard_key))
+                              eff_group, geom)
+    _SIGNATURES.add((mc, sig_budget, sig_phase_b, engine, eff_block,
+                     sig_group, geom, L, S, shard_key))
 
     if tel.enabled:
         tel.counter("sweep.calls", engine=engine).inc()
         tel.counter("sweep.lanes", engine=engine).inc(L)
         if engine == "blocked":
-            n_ev = int(np.count_nonzero(win_event))
-            tel.counter("sweep.windows_event").inc(n_ev)
-            tel.counter("sweep.windows_fast").inc(len(win_event) - n_ev)
+            n_fast, _, n_hoist, n_split = plan.counts
+            tel.counter("sweep.windows_event").inc(plan.n_windows - n_fast)
+            tel.counter("sweep.windows_fast").inc(n_fast)
+            tel.counter("sweep.windows_hoist").inc(n_hoist)
+            tel.counter("sweep.windows_split").inc(n_split)
         else:
             tel.counter("sweep.steps").inc(S)
         if prep_t0 is not None:
@@ -439,17 +429,19 @@ def sweep_lanes(mc: MachineConfig,
                      args={"lanes": L, "steps": S, "engine": engine})
         if engine == "blocked":
             # The compiled scan is opaque, so device wall time is
-            # attributed uniformly across windows; the fast/event
-            # classification itself is exact (host-side schedule).
-            n_w = len(win_event)
+            # attributed uniformly across windows; the window
+            # classification itself is exact (host-side schedule;
+            # branch 0 is the whole-window fast path).
+            n_w = plan.n_windows
             w_dur = (dev_t1 - dev_t0) / max(n_w, 1)
-            for i, is_ev in enumerate(win_event):
-                tel.add_span("window.event" if is_ev else "window.fast",
+            for i, k in enumerate(plan.kind):
+                tel.add_span("window.event" if k else "window.fast",
                              dev_t0 + i * w_dur, dev_t0 + (i + 1) * w_dur,
                              cat="engine", tid=1, args={"window": i})
     if engine == "blocked":
-        # [n_windows, block, L] -> [steps, L], pad rows dropped in order
-        outs = [o[valid_host] for o in outs]
+        # [n_windows, R_out, L] -> [steps, L]: pad and capacity-slack
+        # rows dropped in step order via the plan's emission mask
+        outs = [o[plan.emit_valid] for o in outs]
 
     results: List[RunResult] = []
     for i, (pc, tr) in enumerate(zip(policies, tr_list)):

@@ -30,6 +30,7 @@ def validate_file(path: str) -> Tuple[List[str], str]:
     if path.endswith(".jsonl"):
         problems: List[str] = []
         n = 0
+        seen: dict = {}
         try:
             lines = open(path).read().splitlines()
         except OSError as e:
@@ -44,6 +45,20 @@ def validate_file(path: str) -> Tuple[List[str], str]:
                 problems.append(f"line {i}: unparseable: {e}")
                 continue
             problems += [f"line {i}: {p}" for p in validate_record(rec)]
+            # duplicate-append guard: one run id is shared by every
+            # driver of one ``benchmarks.run`` invocation, but a given
+            # (run_id, driver) pair must appear exactly once per history
+            # manifest — a repeat means a double-append (crashed rerun,
+            # botched merge) that would skew the regression gate's
+            # best-of-last-N windows.
+            key = (rec.get("run_id"), rec.get("driver"))
+            if key in seen:
+                problems.append(
+                    f"line {i}: duplicate record for run_id={key[0]} "
+                    f"driver={key[1]!r} (first at line {seen[key]}; "
+                    f"double-append?)")
+            else:
+                seen[key] = i
         if not n:
             problems.append("empty history (no records)")
         return problems, f"ok — {n} bench records"

@@ -101,6 +101,24 @@ def test_history_roundtrip_and_monotonic_run_id(tmp_path):
     assert any("unparseable" in p for p in problems)
 
 
+def test_validator_rejects_duplicate_run_id_per_driver(tmp_path, capsys):
+    """One run id is shared by every driver of a ``benchmarks.run``
+    invocation, but a (run_id, driver) pair appearing twice in one
+    manifest is a double-append and must fail validation."""
+    hist = tmp_path / "history.jsonl"
+    rec_a = make_record(driver="steady_state", run_id=0, payload={"m": 1})
+    rec_b = make_record(driver="fault_batch", run_id=0, payload={"m": 2})
+    append_record(rec_a, hist)
+    append_record(rec_b, hist)    # same run id, different driver: fine
+    assert validate_cli.main([str(hist)]) == 0
+    capsys.readouterr()
+    append_record(rec_a, hist)    # the exact double-append
+    assert validate_cli.main([str(hist)]) == 1
+    err = capsys.readouterr().err
+    assert "duplicate record for run_id=0 driver='steady_state'" in err
+    assert "first at line 1" in err
+
+
 # ---------------------------------------------------------------------------
 # the regression gate
 # ---------------------------------------------------------------------------
